@@ -1,0 +1,39 @@
+"""Figure 6 + §Sustainability: compute carbon intensity and the GPT-3
+worked example; checks every relation the paper states about CCI."""
+
+from repro.core import cci
+
+
+def run(emit) -> None:
+    v4, v5p, iw = cci.CCI_TPU_V4, cci.CCI_TPU_V5P, cci.CCI_IRONWOOD
+    checks = [
+        ("v5p_total_market", v5p.total_market, 265.0, 0.02),
+        ("v4_over_v5p_total", v4.total_market / v5p.total_market, 1.1, 0.05),
+        ("v4_over_v5p_operational",
+         v4.operational_market / v5p.operational_market, 1.1, 0.05),
+        ("v4_over_v5p_embodied", v4.embodied / v5p.embodied, 1.3, 0.05),
+        ("v5p_over_iw_operational",
+         v5p.operational_market / iw.operational_market, 3.7, 0.05),
+        ("v5p_over_iw_embodied", v5p.embodied / iw.embodied, 3.8, 0.05),
+        ("iw_embodied_share_market", iw.embodied_share_market, 0.23, 0.1),
+        ("iw_embodied_share_location", iw.embodied_share_location,
+         0.08, 0.15),
+        # footnote 7 location-based operational values
+        ("v4_op_location", v4.operational_location, 793.0, 0.01),
+        ("v5p_op_location", v5p.operational_location, 712.0, 0.01),
+        ("iw_op_location", iw.operational_location, 195.0, 0.01),
+    ]
+    for name, val, claim, tol in checks:
+        ok = abs(val - claim) <= tol * claim
+        emit(f"fig6/{name}", val,
+             f"paper={claim} {'OK' if ok else 'MISMATCH'}")
+    # operational share ~75% for all three (market-based)
+    for rec in (v4, v5p, iw):
+        share = rec.operational_market / rec.total_market
+        emit(f"fig6/op_share_{rec.tpu}", share,
+             f"paper=~0.75 {'OK' if 0.68 < share < 0.82 else 'MISMATCH'}")
+    # GPT-3 ballpark: 3.14e23 FLOPs x v5p CCI -> ~8.3e7 g
+    grams = cci.emissions_grams(3.14e23, v5p)
+    emit("sustainability/gpt3_gco2e", grams,
+         f"paper=~8.3e7 g {'OK' if 7.8e7 < grams < 8.8e7 else 'MISMATCH'} "
+         "(83 tCO2e; the paper's 'million metric tons' is a unit slip)")

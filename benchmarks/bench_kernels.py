@@ -1,0 +1,64 @@
+"""MXU/VPU kernel microbenchmarks: wall time of the jnp reference path on
+CPU (interpret-mode Pallas timing is not meaningful) + analytic MXU cycle
+counts for the kernels' BlockSpecs on the v5e target."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hwspec import ROOFLINE_TARGET, TPU_V5E
+from repro.kernels import ops
+
+
+def _time(fn, *args, reps=5):
+    fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def run(emit) -> None:
+    key = jax.random.key(0)
+    m = k = n = 512
+    a = jax.random.normal(key, (m, k), jnp.float32)
+    b = jax.random.normal(key, (k, n), jnp.float32)
+    us = _time(lambda x, y: ops.matmul(x, y, impl="ref"), a, b)
+    flops = 2 * m * k * n
+    emit("kernels/matmul_512_ref_us", us,
+         f"{flops / (us * 1e-6) / 1e9:.1f} GFLOP/s host")
+    # v5e MXU bound: 4x 128x128 MXUs; cycles = flops / (2*4*128*128)
+    mxu_cycles = flops / TPU_V5E.matmul_peak_flops_per_cycle("bf16")
+    emit("kernels/matmul_512_v5e_mxu_cycles", mxu_cycles,
+         f"={flops / ROOFLINE_TARGET.peak_flops * 1e6:.2f}us at peak")
+
+    q = jax.random.normal(key, (8, 1024, 64), jnp.float32)
+    us = _time(lambda x: ops.flash_attention(x, x, x, impl="ref"), q)
+    emit("kernels/flash_attn_8x1024x64_ref_us", us, "")
+
+    kc = jax.random.normal(key, (4, 4096, 8, 64), jnp.float32)
+    qd = jax.random.normal(key, (4, 32, 64), jnp.float32)
+    pos = jnp.full((4,), 4096, jnp.int32)
+    us = _time(lambda *xs: ops.decode_attention(*xs, impl="ref"),
+               qd, kc, kc, pos)
+    cache_bytes = 2 * kc.size * 2  # bf16 on TPU
+    emit("kernels/decode_attn_4x4096_ref_us", us,
+         f"v5e HBM-bound={cache_bytes / ROOFLINE_TARGET.hbm_bw * 1e6:.1f}us")
+
+    r = jax.random.normal(key, (8, 512, 64), jnp.float32)
+    lw = jnp.clip(-jnp.exp(jax.random.normal(key, (8, 512, 64))), -4., 0.)
+    u = jax.random.normal(key, (8, 64)) * 0.5
+    us = _time(lambda *xs: ops.rwkv_wkv(*xs, impl="ref"), r, r, r, lw, u)
+    emit("kernels/rwkv_wkv_8x512x64_ref_us", us, "chunked oracle")
+
+    tbl = jax.random.normal(key, (65536, 128), jnp.float32)
+    idx = jax.random.randint(key, (1024, 8), 0, 65536)
+    w = jax.random.normal(key, (1024, 8), jnp.float32)
+    us = _time(lambda *xs: ops.sparse_gather_sum(*xs, impl="ref"),
+               tbl, idx, w)
+    gathered = 1024 * 8 * 128 * 4
+    emit("kernels/sparse_gather_1kx8_ref_us", us,
+         f"v5e HBM-bound={gathered / ROOFLINE_TARGET.hbm_bw * 1e6:.2f}us")

@@ -1,0 +1,54 @@
+"""§Resilience / Figure 4: OCS scheduling, spare cubes, availability.
+
+Reproduces: (a) cube/OCS arithmetic (96 optical links per cube, 48 OCSes,
+64 cubes -> 4096 chips); (b) "Ironwood can run four 2K-slice jobs even with
+failed nodes, as 16 spare cubes remain"; (c) scheduling success with vs
+without OCS (contiguity) under load; (d) host-availability -> slice
+availability ("without OCSes, host availability must be >99.9%")."""
+
+import numpy as np
+
+from repro.core import hwspec
+from repro.core.ocs import (CUBE, OCSPodScheduler, monte_carlo_contiguous_vs_ocs,
+                            schedulable_jobs, slice_availability)
+
+
+def run(emit) -> None:
+    emit("ocs/optical_links_per_cube", CUBE.optical_links, "paper=96")
+    emit("ocs/ocses_per_cube", CUBE.ocses_per_cube, "paper=48")
+    emit("ocs/tpuv4_chips", 64 * CUBE.chips, "paper=4096")
+
+    # Ironwood: 9216 chips = 144 cubes; four 2048-chip jobs = 128 cubes
+    total_cubes = hwspec.IRONWOOD.pod_size // CUBE.chips
+    emit("ocs/ironwood_cubes", total_cubes, "9216/64")
+    sched = OCSPodScheduler(total_cubes)
+    for j in range(4):
+        alloc = sched.allocate(f"job{j}", 2048)
+        assert alloc is not None
+    emit("ocs/spare_cubes_after_4x2k", sched.spare_cubes(), "paper=16")
+    # kill a cube inside each job; all four must substitute successfully
+    ok = 0
+    for j in range(4):
+        victim = sched.allocations[f"job{j}"].cubes[0]
+        assert sched.fail_cube(victim) == f"job{j}"
+        if sched.substitute(f"job{j}") is not None:
+            ok += 1
+    emit("ocs/jobs_surviving_1_failure_each", ok, "expect 4")
+    emit("ocs/max_schedulable_2k_jobs_12_failed",
+         schedulable_jobs(total_cubes, 12, 2048), "expect 4")
+
+    # contiguity penalty: P(success) for a 32-cube job at 50% busy
+    mc = monte_carlo_contiguous_vs_ocs(64, 8, 0.5, trials=60, seed=7)
+    emit("ocs/p_sched_ocs_8cubes_50pct", mc["p_success_ocs"], "")
+    emit("ocs/p_sched_contig_8cubes_50pct", mc["p_success_contiguous"],
+         "contiguous << OCS (paper: scheduling difficulty rises sharply)")
+
+    # host availability: Ironwood has 2304 hosts
+    hosts = hwspec.IRONWOOD.hosts_per_pod
+    emit("ocs/ironwood_hosts", hosts, "paper=2304")
+    for a in (0.999, 0.9999):
+        emit(f"ocs/pod_avail_host_{a}", slice_availability(a, 9216),
+             "paper: host avail must be >99.9% without OCS isolation")
+    # with OCS, the unit of failure is a 64-chip cube slice (16 hosts)
+    emit("ocs/slice2k_avail_host_0.999", slice_availability(0.999, 2048),
+         "2k slice, 512 hosts")

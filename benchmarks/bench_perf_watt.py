@@ -1,0 +1,19 @@
+"""Figure 5: relative peak performance per TDP Watt across generations."""
+
+from repro.core import cci, hwspec
+
+PAPER_FIG5 = {"tpu_v2": 1.0, "tpu_v3": 1.8, "tpu_v4": 4.9,
+              "tpu_v5p": 5.2, "ironwood": 29.3}
+
+
+def run(emit) -> None:
+    derived = cci.perf_per_watt_relative()
+    for name, val in derived.items():
+        claim = PAPER_FIG5[name]
+        ok = abs(val - claim) / claim < 0.05
+        emit(f"fig5/perf_per_watt_{name}", val,
+             f"paper={claim} {'OK' if ok else 'MISMATCH'}")
+    # paper: "6X for Ironwood from TPU v5p"
+    ratio = derived["ironwood"] / derived["tpu_v5p"]
+    emit("fig5/ironwood_vs_v5p", ratio,
+         f"paper=~6x {'OK' if 5.0 < ratio < 7.0 else 'MISMATCH'}")

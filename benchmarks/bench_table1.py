@@ -1,0 +1,56 @@
+"""Table 1 + Intro scaling bullets: re-derive every claim from the spec
+data and compare against the paper's stated numbers."""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from repro.core import hwspec
+
+# (metric, derived_value, paper_claim, tolerance_fraction)
+
+
+def rows() -> List[Tuple[str, float, float, float]]:
+    s = hwspec.scaling_summary()
+    v2, v5p, iw = hwspec.TPU_V2, hwspec.TPU_V5P, hwspec.IRONWOOD
+    out = [
+        ("hbm_capacity_x", s["hbm_capacity_x"], 10.0, 0.25),
+        ("hbm_bandwidth_x", s["hbm_bandwidth_x"], 10.0, 0.1),
+        ("node_peak_x", s["node_peak_x"], 100.0, 0.05),
+        ("node_peak_bf16_x", s["node_peak_bf16_x"], 50.0, 0.05),
+        ("pod_size_x", s["pod_size_x"], 36.0, 0.01),
+        ("bisection_x", s["bisection_x"], 39.0, 0.02),
+        ("pod_hbm_x", s["pod_hbm_x"], 400.0, 0.1),
+        ("pod_peak_x", s["pod_peak_x"], 3600.0, 0.01),
+        ("perf_per_watt_x", s["perf_per_watt_x"], 30.0, 0.03),
+    ]
+    # bisection bandwidth absolute values (Table 1 row)
+    for spec, claim in [(hwspec.TPU_V2, 1984), (hwspec.TPU_V3, 4480),
+                        (hwspec.TPU_V4, 25600), (v5p, 64000), (iw, 76800)]:
+        out.append((f"bisection_{spec.name}", spec.pod_bisection_gbps,
+                    float(claim), 0.001))
+    # pod peak ExaFLOPS row (the paper's 1-2 significant figures)
+    for spec, claim in [(v2, 0.01), (hwspec.TPU_V3, 0.13),
+                        (hwspec.TPU_V4, 1.1), (v5p, 4.1), (iw, 21.3)]:
+        out.append((f"pod_bf16_EF_{spec.name}",
+                    spec.pod_peak_bf16_exaflops, claim, 0.2))
+    out.append(("pod_fp8_EF_ironwood", iw.pod_peak_fp8_exaflops, 42.5, 0.01))
+    # pod HBM row ("PetaBytes" = kGiB in the paper's units)
+    for spec, claim in [(v2, 4), (hwspec.TPU_V3, 33), (hwspec.TPU_V4, 131),
+                        (v5p, 851), (iw, 1769)]:
+        out.append((f"pod_hbm_{spec.name}", spec.pod_hbm_table_units,
+                    float(claim), 0.03))
+    return out
+
+
+def run(emit) -> None:
+    for name, derived, claim, tol in rows():
+        ok = abs(derived - claim) <= tol * claim
+        emit(f"table1/{name}", derived,
+             f"paper={claim} {'OK' if ok else 'MISMATCH'}")
+    s = hwspec.scaling_summary()
+    # The paper says "nearly 100%" CAGR; 3600x over 8 years is actually
+    # ~2.8x/year (178%) by the standard formula — we report the derived
+    # value and flag the paper's arithmetic.
+    emit("table1/cagr_pod_peak_derived", s["cagr_pod_peak"],
+         "paper claims ~1.0 (see EXPERIMENTS.md note)")

@@ -1,0 +1,61 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,value,note`` CSV. Usage:
+  PYTHONPATH=src python -m benchmarks.run [--only table1,fig5,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (bench_cci, bench_goodput, bench_kernels, bench_ocs,
+                        bench_perf_watt, bench_roofline, bench_sdc,
+                        bench_table1)
+
+SUITES = {
+    "table1": bench_table1,
+    "fig5_perf_watt": bench_perf_watt,
+    "fig6_cci": bench_cci,
+    "ocs": bench_ocs,
+    "goodput": bench_goodput,
+    "sdc": bench_sdc,
+    "kernels": bench_kernels,
+    "roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    failures = []
+
+    def emit(name: str, value, note: str = "") -> None:
+        if isinstance(value, float):
+            val = f"{value:.6g}"
+        else:
+            val = str(value)
+        print(f"{name},{val},{note}", flush=True)
+        if "MISMATCH" in note or "FAILED" in note:
+            failures.append(name)
+
+    print("name,value,note")
+    for name, mod in SUITES.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        mod.run(emit)
+        emit(f"{name}/_suite_seconds", time.time() - t0, "")
+    if failures:
+        print(f"\n{len(failures)} MISMATCH/FAILED rows: {failures[:10]}",
+              file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

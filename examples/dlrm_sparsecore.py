@@ -1,0 +1,92 @@
+"""DLRM-style recommendation model on the SparseCore-analogue embedding
+path — the workload SparseCore was built for (61% of TPU v1's 2016 mix).
+
+Multi-table embedding bags (the Pallas sparse_gather kernel pattern) feed a
+dense MLP tower; trained end-to-end on synthetic click data. Embedding
+tables are the vocab-sharded, all-to-all-gathered tensors on a real pod.
+
+  PYTHONPATH=src python examples/dlrm_sparsecore.py
+"""
+
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+TABLES = {"user": (5000, 32), "item": (20000, 32), "cat": (200, 16)}
+BAG = 4
+MLP = [32 + 32 + 16, 64, 32, 1]
+
+
+def init(key):
+    params = {}
+    for i, (name, (v, d)) in enumerate(TABLES.items()):
+        params[f"emb_{name}"] = jax.random.normal(
+            jax.random.fold_in(key, i), (v, d)) * 0.05
+    dims = MLP
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        params[f"w{i}"] = jax.random.normal(
+            jax.random.fold_in(key, 10 + i), (a, b)) * (a ** -0.5)
+        params[f"b{i}"] = jnp.zeros((b,))
+    return params
+
+
+def forward(params, batch):
+    feats = []
+    for name in TABLES:
+        bag = ops.sparse_gather_sum(
+            params[f"emb_{name}"], batch[f"idx_{name}"],
+            batch[f"w_{name}"], impl="ref")  # swap impl="pallas" on TPU
+        feats.append(bag)
+    x = jnp.concatenate(feats, axis=-1)
+    n = len(MLP) - 1
+    for i in range(n):
+        x = x @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n - 1:
+            x = jax.nn.relu(x)
+    return x[:, 0]
+
+
+def loss_fn(params, batch):
+    logits = forward(params, batch)
+    y = batch["label"]
+    return jnp.mean(jnp.maximum(logits, 0) - logits * y +
+                    jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def make_batch(key, n=256):
+    ks = jax.random.split(key, 8)
+    batch = {}
+    for i, (name, (v, _)) in enumerate(TABLES.items()):
+        batch[f"idx_{name}"] = jax.random.randint(ks[i], (n, BAG), 0, v)
+        batch[f"w_{name}"] = jnp.ones((n, BAG)) / BAG
+    # label correlated with user embedding bucket parity (learnable signal)
+    batch["label"] = (batch["idx_user"].sum(-1) % 2).astype(jnp.float32)
+    return batch
+
+
+def main() -> None:
+    params = init(jax.random.key(0))
+    step = jax.jit(lambda p, b: jax.tree.map(
+        lambda x, g: x - 0.05 * g, p,
+        jax.grad(loss_fn)(p, b)))
+    losses = []
+    t0 = time.time()
+    for i in range(120):
+        batch = make_batch(jax.random.key(100 + i))
+        losses.append(float(loss_fn(params, batch)))
+        params = step(params, batch)
+    print(f"DLRM embedding-bag training: loss {losses[0]:.4f} -> "
+          f"{losses[-1]:.4f} in {time.time()-t0:.1f}s")
+    assert losses[-1] < losses[0]
+    print("OK: SparseCore-path (gather/scatter) model trains")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Failure recovery demo: kill cubes mid-training, watch the OCS scheduler
+substitute spares, restore from checkpoint, and verify the loss trajectory
+is bit-identical to an uninterrupted run (the paper's resilience contract:
+checkpoint/restore + deterministic repeatability + modular isolation).
+
+  PYTHONPATH=src python examples/failure_recovery.py
+"""
+
+import sys
+import tempfile
+
+sys.path.insert(0, "src")
+
+from repro.configs.registry import get_smoke
+from repro.launch.train import build_trainer
+
+STEPS = 30
+
+
+def run(failures, ckpt_dir):
+    cfg = get_smoke("internlm2_1_8b")
+    trainer, state = build_trainer(
+        cfg, batch=4, seq=64, ckpt_dir=ckpt_dir, checkpoint_every=8,
+        failures=failures)
+    state, ledger, losses = trainer.run(state, STEPS)
+    return losses, ledger
+
+
+def main() -> None:
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2:
+        print("running clean baseline ...")
+        losses_clean, ledger_clean = run({}, d1)
+        print("running with cube failures at steps 11 and 23 ...")
+        losses_fail, ledger_fail = run({11: 5, 23: 40}, d2)
+
+    identical = losses_clean == losses_fail
+    print(f"\nloss trajectories identical: {identical}")
+    print(f"clean   goodput: {ledger_clean.goodput:.4f}")
+    s = ledger_fail.summary()
+    print(f"failure goodput: {s['goodput']:.4f} "
+          f"(rework {s['rework_s']:.2f}s, restore {s['restore_s']:.2f}s, "
+          f"detect {s['detect_s']:.2f}s)")
+    assert identical, "recovery must reproduce the exact trajectory"
+    print("OK: failures recovered with exact-replay semantics")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+from repro.configs.registry import (  # noqa: F401
+    ARCHS,
+    SHAPES,
+    ShapeSpec,
+    get_arch,
+    get_cell,
+    CellSettings,
+)

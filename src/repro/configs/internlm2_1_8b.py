@@ -1,0 +1,27 @@
+"""InternLM2-1.8B [arXiv:2403.17297]: 24L, d_model=2048, 16H GQA kv=8
+(head_dim 128), d_ff=8192, vocab=92544, SwiGLU, RoPE theta 1e6."""
+
+from repro.configs.registry import CellSettings
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internlm2-1.8b", family="dense",
+    n_layers=24, d_model=2048, n_heads=16, n_kv_heads=8, d_ff=8192,
+    vocab_size=92544, head_dim=128, rope_theta=1e6,
+)
+
+SMOKE = ModelConfig(
+    name="internlm2-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+    vocab_size=211, head_dim=16,
+)
+
+SETTINGS = {
+    "default": CellSettings(),
+    # §Perf iteration 4 tried rules="dp_pure" here (paper's pure
+    # synchronous DP): collectives fell 121->25 GiB/dev but the REPLICATED
+    # 92544-wide vocab head redid 9x the compute per device — hypothesis
+    # REFUTED, baseline (DP+Megacore TP) restored. See EXPERIMENTS.md.
+    "train_4k": CellSettings(microbatches=4),
+    "prefill_32k": CellSettings(q_chunk=512),
+}

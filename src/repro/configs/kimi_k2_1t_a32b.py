@@ -1,0 +1,38 @@
+"""Kimi K2 [arXiv:2501.kimi2 per assignment]: trillion-parameter MoE.
+61L, d_model=7168, 64H GQA kv=8 (head_dim 112), expert d_ff=2048,
+vocab=163840, 384 experts top-8 (~32B active). The paper-table arch for
+pod-scale MoE training: requires FSDP + expert parallelism + Adafactor to
+approach a 16 GiB/chip pod; serving uses fp8 weights + int8 KV cache
+(Ironwood's FP8 story)."""
+
+from repro.configs.registry import CellSettings
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b", family="moe",
+    n_layers=61, d_model=7168, n_heads=64, n_kv_heads=8, d_ff=2048,
+    vocab_size=163840, head_dim=112,
+    rope_theta=5e4,
+    n_experts=384, experts_per_token=8, capacity_factor=1.25,
+)
+
+SMOKE = ModelConfig(
+    name="kimi-smoke", family="moe",
+    n_layers=2, d_model=64, n_heads=8, n_kv_heads=2, d_ff=32,
+    vocab_size=211, head_dim=8,
+    n_experts=8, experts_per_token=2, capacity_factor=1.25,
+)
+
+SETTINGS = {
+    "default": CellSettings(rules="fsdp_tp_sp", param_dtype="bfloat16",
+                            optimizer="adafactor"),
+    "train_4k": CellSettings(microbatches=16, rules="fsdp_tp_sp",
+                             param_dtype="bfloat16", optimizer="adafactor",
+                             accum_dtype="bfloat16", q_chunk=2048),
+    "prefill_32k": CellSettings(rules="fsdp_tp_sp",
+                                param_dtype="float8_e4m3fn",
+                                cache_dtype="int8", q_chunk=512),
+    "decode_32k": CellSettings(rules="fsdp_tp_sp",
+                               param_dtype="float8_e4m3fn",
+                               cache_dtype="int8"),
+}

@@ -1,0 +1,38 @@
+"""Mixtral 8x22B [arXiv:2401.04088]: 56L, d_model=6144, 48H GQA kv=8
+(head_dim 128), d_ff=16384, vocab=32768, 8 experts top-2, sliding-window
+attention (4096) — SWA makes long_500k decodable with a bounded KV ring."""
+
+from repro.configs.registry import CellSettings
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x22b", family="moe",
+    n_layers=56, d_model=6144, n_heads=48, n_kv_heads=8, d_ff=16384,
+    vocab_size=32768, head_dim=128,
+    rope_theta=1e6, sliding_window=4096,
+    n_experts=8, experts_per_token=2, capacity_factor=1.25,
+)
+
+SMOKE = ModelConfig(
+    name="mixtral-smoke", family="moe",
+    n_layers=2, d_model=64, n_heads=8, n_kv_heads=2, d_ff=96,
+    vocab_size=211, head_dim=8, sliding_window=8,
+    n_experts=4, experts_per_token=2,
+)
+
+SETTINGS = {
+    "default": CellSettings(rules="fsdp_tp_sp", param_dtype="bfloat16",
+                            optimizer="adafactor"),
+    "train_4k": CellSettings(microbatches=16, rules="fsdp_tp_sp",
+                             param_dtype="bfloat16", optimizer="adafactor",
+                             accum_dtype="bfloat16"),
+    "prefill_32k": CellSettings(rules="fsdp_tp_sp",
+                                param_dtype="float8_e4m3fn",
+                                cache_dtype="int8", q_chunk=512),
+    "decode_32k": CellSettings(rules="fsdp_tp_sp",
+                               param_dtype="float8_e4m3fn",
+                               cache_dtype="int8"),
+    "long_500k": CellSettings(rules="fsdp_tp_sp",
+                              param_dtype="float8_e4m3fn",
+                              cache_dtype="int8"),
+}

@@ -1,0 +1,108 @@
+"""Architecture & shape registry.
+
+Each assigned architecture lives in ``repro/configs/<id>.py`` exposing
+``CONFIG`` (exact published numbers), ``SMOKE`` (reduced same-family config
+for CPU tests) and optionally ``SETTINGS`` overriding per-(shape) runtime
+knobs (microbatches, rules, dtypes). ``get_cell`` resolves an
+(arch x shape) cell into everything the dry-run/trainer needs.
+
+Shapes (assigned): train_4k / prefill_32k / decode_32k / long_500k.
+``decode_*``/``long_*`` lower ``serve_decode`` (one token against a seq_len
+KV cache); long_500k requires sub-quadratic attention and is skipped (with a
+recorded reason) for pure full-attention archs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Dict, Optional, Tuple
+
+from repro.models.config import ModelConfig
+
+ARCH_IDS = (
+    "whisper_small",
+    "kimi_k2_1t_a32b",
+    "mixtral_8x22b",
+    "jamba_v01_52b",
+    "qwen2_vl_7b",
+    "internlm2_1_8b",
+    "qwen2_0_5b",
+    "phi4_mini_3_8b",
+    "qwen2_5_3b",
+    "rwkv6_1_6b",
+)
+
+# public ids use dashes
+def canonical(arch: str) -> str:
+    return arch.replace("-", "_").replace(".", "_")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class CellSettings:
+    """Per-(arch, shape) runtime knobs."""
+
+    microbatches: int = 1
+    rules: str = "baseline_dp_tp"  # sharding rule set name
+    param_dtype: str = "float32"
+    cache_dtype: str = "bfloat16"
+    accum_dtype: str = "float32"  # gradient accumulation dtype
+    optimizer: str = "adamw"  # adamw | adafactor
+    q_chunk: int = 2048
+    notes: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    arch: str
+    shape: ShapeSpec
+    config: ModelConfig
+    settings: CellSettings
+    skip_reason: Optional[str] = None
+
+
+def _module(arch: str):
+    return importlib.import_module(f"repro.configs.{canonical(arch)}")
+
+
+def get_arch(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def get_smoke(arch: str) -> ModelConfig:
+    return _module(arch).SMOKE
+
+
+def get_cell(arch: str, shape: str) -> Cell:
+    mod = _module(arch)
+    cfg: ModelConfig = mod.CONFIG
+    spec = SHAPES[shape]
+    settings_map: Dict[str, CellSettings] = getattr(mod, "SETTINGS", {})
+    settings = settings_map.get(shape, settings_map.get(
+        "default", CellSettings()))
+    skip = None
+    if spec.name == "long_500k" and not cfg.subquadratic:
+        skip = ("full quadratic attention: 500k-token decode has no bounded "
+                "state; skipped per assignment (see DESIGN.md "
+                "§Arch-applicability)")
+    return Cell(arch=arch, shape=spec, config=cfg, settings=settings,
+                skip_reason=skip)
+
+
+ARCHS = ARCH_IDS

@@ -1,0 +1,34 @@
+"""RWKV-6 "Finch" 1.6B [arXiv:2404.05892]: 24L, d_model=2048, attention-free
+(32 heads x 64 head_dim WKV state), channel-mix d_ff=7168, vocab=65536.
+Data-dependent decay linear recurrence; constant-size decode state ->
+long_500k runs natively."""
+
+from repro.configs.registry import CellSettings
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-1.6b", family="ssm",
+    n_layers=24, d_model=2048, n_heads=0, n_kv_heads=0, d_ff=7168,
+    vocab_size=65536,
+    attn_positions=(), default_kind="rwkv", rwkv_head_dim=64,
+    pos_emb="none",
+)
+
+SMOKE = ModelConfig(
+    name="rwkv6-smoke", family="ssm",
+    n_layers=2, d_model=64, n_heads=0, n_kv_heads=0, d_ff=128,
+    vocab_size=211, attn_positions=(), default_kind="rwkv",
+    rwkv_head_dim=16, pos_emb="none",
+)
+
+SETTINGS = {
+    "default": CellSettings(rules="sp_only"),
+    # §Perf hillclimb 2: TP-16 reshards every projection's activations for
+    # an attention-free stack; SP-only keeps channel math token-local
+    # (predicted: collective term 5.6s -> ~0.1s, compute-bound)
+    "train_4k": CellSettings(microbatches=4, rules="sp_only",
+                             param_dtype="bfloat16",
+                             accum_dtype="bfloat16",
+                             optimizer="adafactor"),
+    "prefill_32k": CellSettings(rules="sp_only"),
+}

@@ -1,0 +1,180 @@
+"""Analytic (napkin) per-cell cost model — the TPU-expected numbers.
+
+The dry-run's HLO-derived terms measure the program XLA:CPU compiled, which
+differs from the TPU program in two systematic ways: (a) XLA:CPU upcasts
+bf16 dot operands to f32 (2x bytes on every weight/activation it touches),
+and (b) jax accumulates scan-constant cotangents in f32. The roofline
+report therefore carries BOTH the as-compiled terms and this analytic
+model, which is also the basis for the hypothesis->change->measure loop in
+EXPERIMENTS.md §Perf (every optimization's predicted win is computed from
+these formulas first).
+
+Model (per device, per step, bytes):
+  train:   3 traversals (fwd, remat-fwd, bwd) x sharded param bytes
+           + 2 x saved layer inputs (write + read)   [remat checkpoints]
+           + attention score traffic (xla impl materializes fp32 scores;
+             the Pallas flash kernel makes this term vanish)
+           + grads + optimizer state read/write
+  prefill: 1 traversal x params + score traffic + KV cache write
+  decode:  1 traversal x params (weights are read once per token!)
+           + KV cache read (the long-context wall) + state r/w
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Tuple
+
+from repro.configs.registry import Cell, CellSettings, ShapeSpec
+from repro.core.hwspec import ROOFLINE_TARGET, RooflineTarget
+from repro.models.config import ModelConfig
+
+DTYPE_BYTES = {"float32": 4, "bfloat16": 2, "int8": 1, "float8_e4m3fn": 1}
+
+
+@dataclasses.dataclass(frozen=True)
+class NapkinReport:
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    detail: Dict[str, float]
+
+    @property
+    def bound(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)  # type: ignore[arg-type]
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+
+def _mesh_sizes(mesh_shape: Tuple[int, ...], axis_names: Tuple[str, ...]
+                ) -> Dict[str, int]:
+    return dict(zip(axis_names, mesh_shape))
+
+
+def analyze_cell(cell: Cell, mesh_shape: Tuple[int, ...],
+                 axis_names: Tuple[str, ...],
+                 target: RooflineTarget = ROOFLINE_TARGET,
+                 *, flash_attention: bool = False,
+                 pod_bw_fraction: float = 0.25) -> NapkinReport:
+    cfg = cell.config
+    s = cell.settings
+    shape = cell.shape
+    sizes = _mesh_sizes(mesh_shape, axis_names)
+    chips = math.prod(mesh_shape)
+    model_par = sizes.get("model", 1)
+    data_par = sizes.get("data", 1) * sizes.get("pod", 1)
+
+    p_bytes_total = cfg.total_params() * DTYPE_BYTES[s.param_dtype]
+    # TP shards the big dims ~evenly; FSDP rules also shard experts over
+    # data(+pod). Approximate the per-device resident fraction:
+    moe_layers = sum(cfg.sublayer_has_moe(i)
+                     for i in range(cfg.block_len)) * cfg.n_blocks \
+        if cfg.n_experts else 0
+    expert_params = cfg.n_experts * cfg.expert_mlp_params() * moe_layers
+    if s.rules == "fsdp_tp_sp" and cfg.n_experts:
+        expert_frac = expert_params / cfg.total_params()
+        shard = expert_frac / (model_par * data_par) + \
+            (1 - expert_frac) / model_par
+    else:
+        shard = 1.0 / model_par
+    p_dev = p_bytes_total * shard
+
+    tokens_global = shape.global_batch * (
+        shape.seq_len if shape.kind in ("train", "prefill") else 1)
+    tokens_dev = tokens_global / data_par
+    act_bytes = 2  # bf16 activations
+    d = cfg.d_model
+
+    # attention score traffic per traversal (xla impl, fp32 scores, both
+    # written and read around the softmax)
+    kinds = cfg.sublayer_kinds()
+    n_attn = sum(k == "attn" for k in kinds) * cfg.n_blocks
+    if cfg.is_encoder_decoder:
+        n_attn = cfg.n_layers * 2 + cfg.encoder_layers
+    heads_dev = max(cfg.n_heads / model_par, 1) if cfg.n_heads else 0
+    if shape.kind in ("train", "prefill") and n_attn and not flash_attention:
+        kv_len = min(shape.seq_len, cfg.sliding_window or shape.seq_len)
+        per_layer_scores = (shape.global_batch / data_par) * heads_dev \
+            * shape.seq_len * kv_len * 4 * 2  # write+read fp32
+        score_traffic = per_layer_scores * n_attn
+    else:
+        score_traffic = 0.0
+
+    flops_dev = 0.0
+    mem = 0.0
+    coll_bytes_model = 0.0  # bytes reduced over the model axis
+    coll_bytes_data = 0.0
+
+    active_p = cfg.active_params()
+    if shape.kind == "train":
+        flops_dev = 6.0 * active_p * tokens_global / chips
+        traversals = 3.0  # fwd + remat fwd + bwd
+        mem += traversals * p_dev
+        # saved layer inputs: one (B_mb, S, D) per layer per microbatch,
+        # written then read; sequence-parallel when fsdp rules
+        sp = model_par if s.rules == "fsdp_tp_sp" else 1
+        saved = (cfg.n_layers * tokens_dev * d * act_bytes / sp) * 2
+        mem += saved
+        mem += score_traffic * 1.5  # fwd + recompute (bwd reads recomputed)
+        accum_b = DTYPE_BYTES[s.accum_dtype]
+        mem += cfg.total_params() * shard * accum_b * 2  # grad write+read
+        mem += p_dev * 2  # optimizer state r/w (adafactor ~ params bf16-ish)
+        # gradient all-reduce over data axis for non-expert params
+        # (expert grads stay expert-sharded)
+        dense_p = cfg.total_params() - expert_params
+        gb = dense_p / model_par * accum_b
+        coll_bytes_data += 2.0 * gb  # ring all-reduce ~2x
+        # TP activation collectives: ~4 all-reduces of (tokens, d) per
+        # layer across fwd+bwd, ring factor ~2
+        coll_bytes_model += 4 * cfg.n_layers * tokens_dev * d * act_bytes * 2
+    elif shape.kind == "prefill":
+        flops_dev = 2.0 * active_p * tokens_global / chips
+        mem += p_dev
+        mem += score_traffic
+        kv_len = min(shape.seq_len, cfg.sliding_window or shape.seq_len)
+        kvb = DTYPE_BYTES[s.cache_dtype]
+        n_kv_layers = n_attn
+        mem += (shape.global_batch / data_par) * n_kv_layers * kv_len * \
+            cfg.n_kv_heads * cfg.resolved_head_dim * 2 * kvb
+        coll_bytes_model += 2 * cfg.n_layers * tokens_dev * d * act_bytes * 2
+    else:  # decode
+        flops_dev = 2.0 * active_p * tokens_global / chips
+        mem += p_dev  # every weight read once per token
+        kv_len = min(shape.seq_len, cfg.sliding_window or shape.seq_len)
+        kvb = DTYPE_BYTES[s.cache_dtype]
+        kv_layers = (sum(k == "attn" for k in kinds) * cfg.n_blocks
+                     if not cfg.is_encoder_decoder else cfg.n_layers)
+        kv_total = (shape.global_batch * kv_layers * kv_len *
+                    cfg.n_kv_heads * cfg.resolved_head_dim * 2 * kvb)
+        mem += kv_total / chips  # cache sharded over batch x kv_seq
+        # recurrent states (mamba/rwkv)
+        n_ssm = sum(k in ("mamba", "rwkv") for k in kinds) * cfg.n_blocks
+        if n_ssm:
+            if cfg.default_kind == "rwkv":
+                state = cfg.rwkv_heads * cfg.rwkv_head_dim ** 2 * 4
+            else:
+                state = cfg.d_inner * cfg.ssm_state_dim * 4
+            mem += shape.global_batch * n_ssm * state * 2 / data_par
+        coll_bytes_model += 2 * cfg.n_layers * tokens_dev * d * act_bytes * 2
+
+    links_model = 2.0 * target.ici_link_bw
+    links_data = 2.0 * target.ici_link_bw
+    t_coll = coll_bytes_model / links_model + coll_bytes_data / links_data
+
+    return NapkinReport(
+        t_compute=flops_dev / target.peak_flops,
+        t_memory=mem / target.hbm_bw,
+        t_collective=t_coll,
+        detail={
+            "params_dev_gib": p_dev / 2**30,
+            "score_traffic_gib": score_traffic / 2**30,
+            "mem_gib": mem / 2**30,
+            "flops_dev": flops_dev,
+            "coll_model_gib": coll_bytes_model / 2**30,
+            "coll_data_gib": coll_bytes_data / 2**30,
+        })

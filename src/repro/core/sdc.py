@@ -1,0 +1,203 @@
+"""Silent-data-corruption defenses: FBIST analogue + sampled replay checker.
+
+Paper (§Resilience, Ironwood): two hardware mechanisms combat SDC —
+
+  1. FBIST — a functional built-in self-test engine inside the MXU runs
+     high-coverage test patterns at burn-in and during operation to catch
+     marginal silicon;
+  2. hardware replay — the VPU opportunistically re-executes randomly
+     sampled vector bundles on idle lanes ("replaying odd-lane operations on
+     the even lanes") and compares, with zero architectural state change.
+
+We implement the *policies* at framework level with the same detection
+semantics. FBIST runs golden test patterns through the very kernels used for
+training and compares against precomputed checksums; the replay checker
+re-executes a sampled fraction of a step's vector work on permuted lanes and
+demands bitwise equality (TPU/XLA vector ops are deterministic, so any
+mismatch is corruption). Faults are injected in tests via ``FaultyDevice``.
+Detected devices are reported to the resilience layer, which maps them out
+via the OCS scheduler — completing the paper's detect -> map-out loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Fault injection (tests / simulation only).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FaultModel:
+    """A marginal-silicon fault: with probability ``rate`` per call, flip a
+    low-order mantissa bit region of one output element (classic SDC: a
+    plausible-looking wrong value, not a NaN)."""
+
+    rate: float = 1.0
+    magnitude: float = 1e-2
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        self._rng = np.random.default_rng(self.seed)
+
+    def corrupt(self, x: np.ndarray) -> np.ndarray:
+        if self._rng.random() >= self.rate or x.size == 0:
+            return x
+        x = np.array(x, copy=True)
+        idx = self._rng.integers(0, x.size)
+        flat = x.reshape(-1)
+        flat[idx] = flat[idx] * (1.0 + self.magnitude) + self.magnitude
+        return x
+
+
+def faulty_wrap(fn: Callable[..., Array],
+                fault: FaultModel) -> Callable[..., Array]:
+    """Wrap a compute callable so its output is silently corrupted."""
+
+    def wrapped(*args: Array) -> Array:
+        out = np.asarray(fn(*args))
+        return jnp.asarray(fault.corrupt(out))
+
+    return wrapped
+
+
+# ---------------------------------------------------------------------------
+# FBIST: functional built-in self test for matmul units.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FBISTReport:
+    passed: bool
+    patterns_run: int
+    first_failing_pattern: Optional[int]
+    max_abs_err: float
+
+
+class FBIST:
+    """Golden-pattern self-test for a matmul implementation.
+
+    Patterns are chosen for datapath coverage the way hardware FBIST
+    patterns are: dense random (exercise all PEs), rank-1 structured
+    (systolic edge propagation), alternating-sign checkerboards (carry
+    chains), denormal-adjacent small values, and large-magnitude values
+    (accumulator range). Goldens come from float64 numpy — an independent
+    oracle of the unit under test.
+    """
+
+    def __init__(self, m: int = 128, k: int = 128, n: int = 128,
+                 n_patterns: int = 8, seed: int = 1234,
+                 tol: float = 5e-2):
+        self.shape = (m, k, n)
+        self.n_patterns = n_patterns
+        self.seed = seed
+        self.tol = tol
+        self._patterns = [self._make_pattern(i) for i in range(n_patterns)]
+
+    def _make_pattern(self, i: int) -> Tuple[np.ndarray, np.ndarray]:
+        m, k, n = self.shape
+        rng = np.random.default_rng(self.seed + i)
+        kind = i % 5
+        if kind == 0:  # dense random
+            a = rng.standard_normal((m, k))
+            b = rng.standard_normal((k, n))
+        elif kind == 1:  # rank-1 structured
+            a = np.outer(rng.standard_normal(m), np.ones(k))
+            b = np.outer(np.ones(k), rng.standard_normal(n))
+        elif kind == 2:  # checkerboard
+            a = ((np.indices((m, k)).sum(0) % 2) * 2.0 - 1.0)
+            b = ((np.indices((k, n)).sum(0) % 2) * 2.0 - 1.0)
+        elif kind == 3:  # tiny magnitudes
+            a = rng.standard_normal((m, k)) * 1e-3
+            b = rng.standard_normal((k, n)) * 1e-3
+        else:  # large magnitudes (accumulator range)
+            a = rng.standard_normal((m, k)) * 64.0
+            b = rng.standard_normal((k, n)) * 64.0
+        return a.astype(np.float32), b.astype(np.float32)
+
+    def run(self, matmul: Callable[[Array, Array], Array]) -> FBISTReport:
+        max_err = 0.0
+        for i, (a, b) in enumerate(self._patterns):
+            golden = a.astype(np.float64) @ b.astype(np.float64)
+            got = np.asarray(matmul(jnp.asarray(a), jnp.asarray(b)),
+                             dtype=np.float64)
+            scale = np.maximum(np.abs(golden), 1.0)
+            err = float(np.max(np.abs(got - golden) / scale))
+            max_err = max(max_err, err)
+            if not np.isfinite(err) or err > self.tol:
+                return FBISTReport(False, i + 1, i, max_err)
+        return FBISTReport(True, self.n_patterns, None, max_err)
+
+
+# ---------------------------------------------------------------------------
+# Replay checker: sampled redundant execution of vector work.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplayReport:
+    passed: bool
+    bundles_checked: int
+    mismatches: int
+
+
+class ReplayChecker:
+    """Sampled redundant execution with lane permutation.
+
+    ``check(fn, x, key)`` picks a random ``sample_frac`` of rows ("bundles")
+    of x, evaluates fn on them twice — once as-is and once with the lane
+    (last) dimension reversed, un-reversing the result — and requires exact
+    equality for elementwise fn. The reversal means the redundant pass uses
+    different physical lanes, which is what catches a bad lane (the paper's
+    odd-lanes-on-even-lanes trick). Zero impact on the training step itself:
+    it is a separate, sampled computation.
+    """
+
+    def __init__(self, sample_frac: float = 0.0625, atol: float = 0.0):
+        if not 0.0 < sample_frac <= 1.0:
+            raise ValueError("sample_frac in (0, 1]")
+        self.sample_frac = sample_frac
+        self.atol = atol
+
+    def check(self, fn: Callable[[Array], Array], x: Array,
+              key: Array) -> ReplayReport:
+        if x.ndim < 2:
+            x = x.reshape(1, -1)
+        n = x.shape[0]
+        k = max(1, int(round(n * self.sample_frac)))
+        idx = jax.random.choice(key, n, (k,), replace=False)
+        sample = jnp.take(x, idx, axis=0)
+        primary = fn(sample)
+        replayed = jnp.flip(fn(jnp.flip(sample, axis=-1)), axis=-1)
+        diff = np.asarray(jnp.abs(primary - replayed))
+        mismatches = int((diff > self.atol).sum())
+        return ReplayReport(mismatches == 0, k, mismatches)
+
+
+# ---------------------------------------------------------------------------
+# Fleet screening loop (FBIST across devices; OCS map-out hook).
+# ---------------------------------------------------------------------------
+
+
+def screen_devices(
+    matmuls: Sequence[Callable[[Array, Array], Array]],
+    *,
+    fbist: Optional[FBIST] = None,
+) -> List[int]:
+    """Run FBIST across a fleet of per-device matmul callables; return the
+    indices of defective devices (to be mapped out via the OCS scheduler)."""
+    fb = fbist or FBIST()
+    bad = []
+    for i, mm in enumerate(matmuls):
+        if not fb.run(mm).passed:
+            bad.append(i)
+    return bad

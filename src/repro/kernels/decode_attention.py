@@ -1,0 +1,120 @@
+"""Decode attention Pallas kernel: one query token vs a long KV cache.
+
+Memory-bound by design (the roofline term that dominates decode cells):
+the kernel's job is to stream the KV cache through VMEM exactly once at
+full HBM bandwidth while the (tiny) query stays resident. Blockwise over
+the cache length with an online-softmax running state, GQA-aware: the
+query block carries all heads of one sequence; each KV head is used by
+n_heads/n_kv query heads via in-VMEM reshape (no HBM duplication —
+SparseCore-style "read once, use many").
+
+Validity masking supports ring buffers: slot i holds absolute position
+i + W*wraps (see models/attention.decode_attention, the jnp oracle).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *,
+                   block_k: int, n_k: int, window: Optional[int],
+                   cache_len: int, scale: float, groups: int):
+    ik = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[0]  # valid token count (scalar, prefetched)
+    q = q_ref[0].astype(jnp.float32) * scale  # (H, d)
+    k = k_ref[0].astype(jnp.float32)          # (bk, KV, d)
+    bk, kv, d = k.shape
+    h = q.shape[0]
+    # GQA: fold q heads into (KV, groups) so scores come from one batched dot
+    qg = q.reshape(kv, groups, d)
+    scores = jax.lax.dot_general(
+        qg, k, (((2,), (2,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32)  # (KV, groups, bk)
+
+    slot = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, 1, bk), 2)
+    wraps = jnp.maximum(pos - 1 - slot, 0) // cache_len
+    abs_pos = slot + wraps * cache_len
+    valid = abs_pos < pos
+    if window is not None:
+        valid &= abs_pos >= pos - window
+    scores = jnp.where(valid, scores, NEG_INF)
+
+    m_prev = m_ref[...]  # (KV, groups)
+    m_new = jnp.maximum(m_prev, scores.max(axis=-1))
+    p = jnp.exp(scores - m_new[..., None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+    v_f = v_ref[0].astype(jnp.float32)  # (bk, KV, d)
+    pv = jax.lax.dot_general(
+        p, v_f, (((2,), (0,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32)  # (KV, groups, d)
+    acc_ref[...] = acc_ref[...] * corr[..., None] + pv
+    m_ref[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _store():
+        denom = jnp.maximum(l_ref[...], 1e-30)[..., None]
+        out = (acc_ref[...] / denom).reshape(h, d)
+        o_ref[0, ...] = out.astype(o_ref.dtype)
+
+
+def decode_attention(
+    q: Array, k_cache: Array, v_cache: Array, pos: Array, *,
+    window: Optional[int] = None,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> Array:
+    """q: (B, H, D); caches: (B, W, KV, D); pos: (B,) int32 (uniform).
+    Returns (B, H, D)."""
+    b, h, d = q.shape
+    _, w, kv, _ = k_cache.shape
+    groups = h // kv
+    block_k = min(block_k, w)
+    if w % block_k:
+        raise ValueError(f"cache window {w} % block {block_k}")
+    n_k = w // block_k
+    grid = (b, n_k)
+    scale = d ** -0.5
+    return pl.pallas_call(
+        functools.partial(
+            _decode_kernel, block_k=block_k, n_k=n_k, window=window,
+            cache_len=w, scale=scale, groups=groups),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, h, d), lambda i, j, pos_ref: (i, 0, 0)),
+                pl.BlockSpec((1, block_k, kv, d),
+                             lambda i, j, pos_ref: (i, j, 0, 0)),
+                pl.BlockSpec((1, block_k, kv, d),
+                             lambda i, j, pos_ref: (i, j, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, h, d),
+                                   lambda i, j, pos_ref: (i, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((kv, groups), jnp.float32),
+                pltpu.VMEM((kv, groups), jnp.float32),
+                pltpu.VMEM((kv, groups, d), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=interpret,
+    )(pos, q, k_cache, v_cache)

@@ -1,0 +1,79 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``impl`` selects: "pallas" (TPU target), "interpret" (CPU validation of the
+kernel body), "ref" (pure-jnp oracle). Model code calls these through
+ModelContext.attn_impl-style switches; tests sweep impl x shapes x dtypes.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention as _decode_pl
+from repro.kernels.flash_attention import flash_attention as _flash_pl
+from repro.kernels.matmul import matmul as _matmul_pl
+from repro.kernels.rwkv_scan import rwkv_wkv as _wkv_pl
+from repro.kernels.sparse_gather import sparse_gather_sum as _gather_pl
+
+Array = jax.Array
+
+
+@partial(jax.jit, static_argnames=("impl", "out_dtype", "block_m",
+                                   "block_n", "block_k"))
+def matmul(a: Array, b: Array, *, impl: str = "pallas", out_dtype=None,
+           block_m: int = 256, block_n: int = 256,
+           block_k: int = 512) -> Array:
+    if impl == "ref":
+        return ref.matmul_ref(a, b, out_dtype)
+    return _matmul_pl(a, b, out_dtype=out_dtype, block_m=block_m,
+                      block_n=block_n, block_k=block_k,
+                      interpret=impl == "interpret")
+
+
+@partial(jax.jit, static_argnames=("impl", "causal", "window",
+                                   "block_q", "block_k"))
+def flash_attention(q: Array, k: Array, v: Array, *, impl: str = "pallas",
+                    causal: bool = True, window: Optional[int] = None,
+                    block_q: int = 128, block_k: int = 128) -> Array:
+    """(BH, S, D) in/out."""
+    if impl == "ref":
+        return ref.flash_attention_ref(q, k, v, causal=causal,
+                                       window=window)
+    return _flash_pl(q, k, v, causal=causal, window=window,
+                     block_q=block_q, block_k=block_k,
+                     interpret=impl == "interpret")
+
+
+@partial(jax.jit, static_argnames=("impl", "window", "block_k"))
+def decode_attention(q: Array, k_cache: Array, v_cache: Array, pos: Array,
+                     *, impl: str = "pallas",
+                     window: Optional[int] = None,
+                     block_k: int = 512) -> Array:
+    if impl == "ref":
+        return ref.decode_attention_ref(q, k_cache, v_cache, pos,
+                                        window=window)
+    return _decode_pl(q, k_cache, v_cache, pos, window=window,
+                      block_k=block_k, interpret=impl == "interpret")
+
+
+@partial(jax.jit, static_argnames=("impl", "chunk"))
+def rwkv_wkv(r: Array, k: Array, v: Array, logw: Array, u: Array, *,
+             impl: str = "pallas", chunk: int = 16) -> Array:
+    if impl == "ref":
+        return ref.rwkv_wkv_ref(r, k, v, logw, u)
+    return _wkv_pl(r, k, v, logw, u, chunk=chunk,
+                   interpret=impl == "interpret")
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def sparse_gather_sum(table: Array, indices: Array, weights: Array, *,
+                      impl: str = "pallas") -> Array:
+    if impl == "ref":
+        return ref.sparse_gather_sum_ref(table, indices, weights)
+    return _gather_pl(table, indices, weights,
+                      interpret=impl == "interpret")

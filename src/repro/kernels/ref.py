@@ -1,0 +1,88 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def matmul_ref(a: Array, b: Array, out_dtype=None) -> Array:
+    out = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32))
+    return out.astype(out_dtype or a.dtype)
+
+
+def flash_attention_ref(q: Array, k: Array, v: Array, *,
+                        causal: bool = True,
+                        window: Optional[int] = None) -> Array:
+    """q,k,v: (BH, S, D)."""
+    bh, s, d = q.shape
+    scores = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (d ** -0.5)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    allowed = jnp.ones((s, s), bool)
+    if causal:
+        allowed &= qpos >= kpos
+    if window is not None:
+        allowed &= (qpos - kpos) < window
+    scores = jnp.where(allowed, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bqk,bkd->bqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q: Array, k_cache: Array, v_cache: Array,
+                         pos: Array, *,
+                         window: Optional[int] = None) -> Array:
+    """q: (B,H,D); caches (B,W,KV,D); pos: (B,). Ring-buffer aware."""
+    b, h, d = q.shape
+    _, w, kv, _ = k_cache.shape
+    groups = h // kv
+    slot = jnp.arange(w)
+    wraps = jnp.maximum(pos[:, None] - 1 - slot[None, :], 0) // w
+    abs_pos = slot[None, :] + wraps * w
+    valid = abs_pos < pos[:, None]
+    if window is not None:
+        valid &= abs_pos >= pos[:, None] - window
+    kf = jnp.repeat(k_cache, groups, axis=2).astype(jnp.float32)
+    vf = jnp.repeat(v_cache, groups, axis=2).astype(jnp.float32)
+    scores = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32), kf)
+    scores = scores * (d ** -0.5)
+    scores = jnp.where(valid[:, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", probs, vf)
+    return out.astype(q.dtype)
+
+
+def rwkv_wkv_ref(r: Array, k: Array, v: Array, logw: Array,
+                 u: Array) -> Array:
+    """Token-serial recurrence (the definitional oracle).
+    r,k,v,logw: (BH,S,hd) fp32; u: (BH,hd)."""
+    bh, s, hd = r.shape
+
+    def per_seq(r1, k1, v1, lw1, u1):
+        def step(state, xs):
+            rt, kt, vt, lwt = xs
+            kv = jnp.outer(kt, vt)  # (hd_k, hd_v)
+            out = rt @ (state + u1[:, None] * kv)
+            new_state = jnp.exp(lwt)[:, None] * state + kv
+            return new_state, out
+
+        s0 = jnp.zeros((hd, hd), jnp.float32)
+        _, outs = jax.lax.scan(step, s0, (r1, k1, v1, lw1))
+        return outs
+
+    return jax.vmap(per_seq)(r, k, v, logw, u)
+
+
+def sparse_gather_sum_ref(table: Array, indices: Array,
+                          weights: Array) -> Array:
+    rows = table[indices]  # (N, bag, D)
+    out = jnp.einsum("nbd,nb->nd", rows.astype(jnp.float32),
+                     weights.astype(jnp.float32))
+    return out.astype(table.dtype)

@@ -1,0 +1,70 @@
+"""SparseCore-style embedding gather/bag Pallas kernel.
+
+The paper's SparseCore tiles "read activations and parameters from HBM into
+the tile's slice of Sparse Vector Memory" with data-dependent addresses —
+embedding-bag lookups. TPU adaptation: the index array is *scalar-
+prefetched* (PrefetchScalarGridSpec) so the BlockSpec index_map can steer
+each grid step's HBM->VMEM DMA to the right embedding row — the gather
+never materializes an index tensor on the vector units, matching the
+Fetch-Unit design.
+
+Each grid step processes one bag: ``bag_size`` rows are DMA'd (one block
+per row via the index map), summed with weights in VMEM, one output row
+written back (the Flush-Unit direction).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _gather_kernel(idx_ref, table_ref, w_ref, o_ref, acc_ref, *,
+                   bag_size: int):
+    j = pl.program_id(1)  # position within the bag
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    weight = w_ref[0, j]
+    acc_ref[...] += table_ref[...].astype(jnp.float32) * weight
+
+    @pl.when(j == bag_size - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def sparse_gather_sum(
+    table: Array, indices: Array, weights: Array, *,
+    interpret: bool = False,
+) -> Array:
+    """Embedding bag: out[i] = sum_j weights[i,j] * table[indices[i,j]].
+
+    table: (V, D); indices: (N, bag) int32; weights: (N, bag) fp32.
+    Returns (N, D)."""
+    v, d = table.shape
+    n, bag = indices.shape
+    grid = (n, bag)
+    return pl.pallas_call(
+        functools.partial(_gather_kernel, bag_size=bag),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                # DMA exactly the row the prefetched index names
+                pl.BlockSpec((1, d), lambda i, j, idx: (idx[i, j], 0)),
+                pl.BlockSpec((1, bag), lambda i, j, idx: (i, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, d), lambda i, j, idx: (i, 0)),
+            scratch_shapes=[pltpu.VMEM((1, d), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((n, d), table.dtype),
+        interpret=interpret,
+    )(indices, table, weights)

@@ -1,0 +1,50 @@
+"""Production mesh construction.
+
+Single pod: (16, 16) = 256 chips (data, model) — one TPU v5e pod.
+Multi-pod: (2, 16, 16) = 512 chips (pod, data, model) — two pods; the
+"pod" axis carries synchronous data parallelism exactly as the paper's
+multi-pod Gemini training does.
+
+``make_production_mesh`` is a function (not a module constant) so importing
+this module never touches jax device state; the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax import.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]):
+    """Arbitrary mesh (tests use small ones, e.g. (2,2,2) on 8 devices)."""
+    import jax
+    return jax.make_mesh(
+        tuple(shape), tuple(axes),
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def mesh_for_devices(n: int, *, multi_pod: bool = False):
+    """Scaled-down mesh with the production axis structure for n devices."""
+    import jax
+    if multi_pod:
+        if n % 2:
+            raise ValueError("multi-pod mesh needs even device count")
+        side = int(np.sqrt(n // 2))
+        if 2 * side * side != n:
+            raise ValueError(f"cannot square {n//2} devices")
+        return make_mesh((2, side, side), ("pod", "data", "model"))
+    side = int(np.sqrt(n))
+    if side * side != n:
+        raise ValueError(f"cannot square {n} devices")
+    return make_mesh((side, side), ("data", "model"))

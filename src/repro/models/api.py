@@ -1,0 +1,73 @@
+"""Family-agnostic model API: specs, loss, prefill, decode, input specs.
+
+Everything downstream (trainer, server, dry-run, tests) goes through these
+five functions; encoder-decoder vs decoder-only dispatch happens here.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, lm
+from repro.models.blocks import ModelContext
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+def model_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    if cfg.is_encoder_decoder:
+        return encdec.encdec_specs(cfg)
+    return lm.lm_specs(cfg)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, ctx: ModelContext):
+    if cfg.is_encoder_decoder:
+        return encdec.encdec_loss(params, batch, cfg, ctx)
+    return lm.lm_loss(params, batch, cfg, ctx)
+
+
+def cache_spec(cfg: ModelConfig, batch: int, window: int,
+               ctx: ModelContext) -> Dict[str, Any]:
+    if cfg.is_encoder_decoder:
+        return encdec.encdec_cache_spec(cfg, batch, window, ctx)
+    return lm.lm_cache_spec(cfg, batch, window, ctx)
+
+
+def prefill_fn(params, batch, cfg: ModelConfig, ctx: ModelContext,
+               window: int):
+    if cfg.is_encoder_decoder:
+        return encdec.encdec_prefill(params, batch, cfg, ctx, window)
+    return lm.lm_prefill(params, batch["tokens"], cfg, ctx, window)
+
+
+def decode_fn(params, token, cache, cfg: ModelConfig, ctx: ModelContext):
+    if cfg.is_encoder_decoder:
+        return encdec.encdec_decode_step(params, token, cache, cfg, ctx)
+    return lm.lm_decode_step(params, token, cache, cfg, ctx)
+
+
+def train_batch_specs(cfg: ModelConfig, batch: int,
+                      seq: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+    }
+    if cfg.is_encoder_decoder:
+        specs["enc_feats"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    if cfg.pos_emb == "mrope":
+        specs["positions"] = jax.ShapeDtypeStruct((3, batch, seq), jnp.int32)
+    return specs
+
+
+BATCH_LOGICAL = {
+    "tokens": ("batch", "seq"),
+    "labels": ("batch", "seq"),
+    "loss_mask": ("batch", "seq"),
+    "enc_feats": ("batch", None, "embed"),
+    "positions": (None, "batch", "seq"),
+}

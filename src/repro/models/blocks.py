@@ -1,0 +1,385 @@
+"""Block assembly: sublayer specs, forward, and KV/state caches.
+
+A *block* is the scan unit: ``block_len`` sublayers, each
+(norm -> core -> residual, norm -> mlp/moe -> residual) where core is
+attention, Mamba, or RWKV time-mix per ``cfg.sublayer_kinds()``. Parameters
+for all blocks are stacked on a leading n_blocks axis and consumed by
+``lax.scan`` — keeping the compiled HLO one-block-sized regardless of depth
+(61-layer models compile as fast as 2-layer ones; the roofline analyzer
+scales costs by the known trip count).
+
+Caches: every sublayer owns a dict cache (attention: ring-buffered k/v;
+mamba: conv window + ssm state; rwkv: token-shift + wkv state). Cache trees
+are stacked across blocks and scanned jointly with the parameters during
+prefill/decode.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (apply_positional, decode_attention,
+                                    full_attention)
+from repro.models.config import ModelConfig
+from repro.models.mamba import (mamba_decode_step, mamba_forward,
+                                mamba_param_specs)
+from repro.models.moe import (dense_ffn, dense_ffn_specs, moe_ffn,
+                              moe_param_specs)
+from repro.models.ops import rms_norm
+from repro.models.params import ParamSpec, ones_init, zeros_init
+from repro.models.rwkv6 import (rwkv_channel_mix, rwkv_channel_specs,
+                                rwkv_param_specs, rwkv_time_mix)
+
+Array = jax.Array
+ShardFn = Callable[[Array, Tuple[Optional[str], ...]], Array]
+
+
+def _identity_shard(x: Array, logical: Tuple[Optional[str], ...]) -> Array:
+    return x
+
+
+class ModelContext:
+    """Runtime knobs threaded through forwards (not traced)."""
+
+    def __init__(self, *, compute_dtype=jnp.bfloat16, q_chunk: int = 2048,
+                 shard: ShardFn = _identity_shard, mamba_chunk: int = 256,
+                 rwkv_chunk: int = 16, attn_impl: str = "xla",
+                 decode_cache_dtype=None):
+        self.compute_dtype = compute_dtype
+        self.q_chunk = q_chunk
+        self.shard = shard
+        self.mamba_chunk = mamba_chunk
+        self.rwkv_chunk = rwkv_chunk
+        self.attn_impl = attn_impl
+        self.decode_cache_dtype = decode_cache_dtype  # None -> compute dtype
+
+    @property
+    def cache_dtype(self):
+        return self.decode_cache_dtype or self.compute_dtype
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+def attn_param_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, h, kv, hd = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                    cfg.resolved_head_dim)
+    specs = {
+        "wq": ParamSpec((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((h, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        specs["bq"] = ParamSpec((h, hd), ("heads", "head_dim"),
+                                init=zeros_init())
+        specs["bk"] = ParamSpec((kv, hd), ("kv_heads", "head_dim"),
+                                init=zeros_init())
+        specs["bv"] = ParamSpec((kv, hd), ("kv_heads", "head_dim"),
+                                init=zeros_init())
+    return specs
+
+
+def sublayer_specs(cfg: ModelConfig, idx: int) -> Dict[str, Any]:
+    kind = cfg.sublayer_kinds()[idx]
+    d = cfg.d_model
+    out: Dict[str, Any] = {
+        "ln1": ParamSpec((d,), ("embed",), init=ones_init()),
+        "ln2": ParamSpec((d,), ("embed",), init=ones_init()),
+    }
+    if kind == "attn":
+        out["core"] = attn_param_specs(cfg)
+    elif kind == "mamba":
+        out["core"] = mamba_param_specs(cfg)
+    elif kind == "rwkv":
+        out["core"] = rwkv_param_specs(cfg)
+    else:
+        raise ValueError(kind)
+    if kind == "rwkv":
+        out["mlp"] = rwkv_channel_specs(cfg)
+    elif cfg.sublayer_has_moe(idx):
+        out["mlp"] = moe_param_specs(cfg)
+    else:
+        out["mlp"] = dense_ffn_specs(cfg)
+    return out
+
+
+def block_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    return {f"sl{i}": sublayer_specs(cfg, i) for i in range(cfg.block_len)}
+
+
+def stack_specs(specs: Any, n: int) -> Any:
+    """Add a leading stacking dim (logical axis None) to every leaf."""
+
+    def stack(s: ParamSpec) -> ParamSpec:
+        return ParamSpec((n, *s.shape), (None, *s.logical), s.init, s.dtype)
+
+    return jax.tree.map(stack, specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / no cache)
+# ---------------------------------------------------------------------------
+
+
+def _project_qkv(p: Dict[str, Array], x: Array, cfg: ModelConfig,
+                 dtype) -> Tuple[Array, Array, Array]:
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dtype)
+        k = k + p["bk"].astype(dtype)
+        v = v + p["bv"].astype(dtype)
+    return q, k, v
+
+
+def attn_forward(p: Dict[str, Array], x: Array, cfg: ModelConfig,
+                 ctx: ModelContext,
+                 positions: Optional[Array] = None,
+                 mrope_positions: Optional[Array] = None,
+                 attn_type: Optional[str] = None) -> Array:
+    b, s, _ = x.shape
+    dtype = ctx.compute_dtype
+    q, k, v = _project_qkv(p, x, cfg, dtype)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k = apply_positional(q, k, cfg, positions, mrope_positions)
+    q = ctx.shard(q, ("batch", "seq", "heads", None))
+    k = ctx.shard(k, ("batch", "seq", "kv_heads", None))
+    v = ctx.shard(v, ("batch", "seq", "kv_heads", None))
+    out = full_attention(q, k, v, cfg, q_chunk=ctx.q_chunk,
+                         attn_type=attn_type, impl=ctx.attn_impl)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dtype))
+
+
+def sublayer_forward(p: Dict[str, Any], x: Array, cfg: ModelConfig,
+                     ctx: ModelContext, idx: int,
+                     mrope_positions: Optional[Array] = None
+                     ) -> Tuple[Array, Dict[str, Array]]:
+    kind = cfg.sublayer_kinds()[idx]
+    dtype = ctx.compute_dtype
+    aux: Dict[str, Array] = {}
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind == "attn":
+        core = attn_forward(p["core"], h, cfg, ctx,
+                            mrope_positions=mrope_positions)
+    elif kind == "mamba":
+        core = mamba_forward(p["core"], h, cfg, dtype,
+                             chunk=ctx.mamba_chunk)
+    else:  # rwkv
+        core = rwkv_time_mix(p["core"], h, cfg, dtype, chunk=ctx.rwkv_chunk)
+    x = x + core
+    x = ctx.shard(x, ("batch", "act_seq", "embed"))
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if kind == "rwkv":
+        mlp = rwkv_channel_mix(p["mlp"], h, cfg, dtype)
+    elif cfg.sublayer_has_moe(idx):
+        mlp, aux = moe_ffn(p["mlp"], h, cfg, dtype, shard=ctx.shard)
+    else:
+        mlp = dense_ffn(p["mlp"], h, cfg, dtype)
+    x = x + mlp
+    x = ctx.shard(x, ("batch", "act_seq", "embed"))
+    return x, aux
+
+
+def block_forward(block_params: Dict[str, Any], x: Array, cfg: ModelConfig,
+                  ctx: ModelContext,
+                  mrope_positions: Optional[Array] = None
+                  ) -> Tuple[Array, Dict[str, Array]]:
+    aux_total: Dict[str, Array] = {}
+    for i in range(cfg.block_len):
+        x, aux = sublayer_forward(block_params[f"sl{i}"], x, cfg, ctx, i,
+                                  mrope_positions)
+        for key, val in aux.items():
+            aux_total[key] = aux_total.get(key, 0.0) + val
+    return x, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Caches (prefill / decode)
+# ---------------------------------------------------------------------------
+
+
+def sublayer_cache_spec(cfg: ModelConfig, idx: int, batch: int,
+                        window: int, ctx: ModelContext) -> Dict[str, Any]:
+    kind = cfg.sublayer_kinds()[idx]
+    hd = cfg.resolved_head_dim
+    cdt = ctx.cache_dtype
+    if kind == "attn":
+        w = window
+        if cfg.sliding_window is not None:
+            w = min(window, cfg.sliding_window)
+        return {
+            "k": jax.ShapeDtypeStruct((batch, w, cfg.n_kv_heads, hd), cdt),
+            "v": jax.ShapeDtypeStruct((batch, w, cfg.n_kv_heads, hd), cdt),
+        }
+    if kind == "mamba":
+        return {
+            "conv": jax.ShapeDtypeStruct(
+                (batch, cfg.ssm_conv_width - 1, cfg.d_inner),
+                ctx.compute_dtype),
+            "ssm": jax.ShapeDtypeStruct(
+                (batch, cfg.d_inner, cfg.ssm_state_dim), jnp.float32),
+        }
+    # rwkv
+    return {
+        "tok": jax.ShapeDtypeStruct((batch, 1, cfg.d_model),
+                                    ctx.compute_dtype),
+        "wkv": jax.ShapeDtypeStruct(
+            (batch, cfg.rwkv_heads, cfg.rwkv_head_dim, cfg.rwkv_head_dim),
+            jnp.float32),
+        "cm_tok": jax.ShapeDtypeStruct((batch, 1, cfg.d_model),
+                                       ctx.compute_dtype),
+    }
+
+
+CACHE_LOGICAL = {
+    "k": ("batch", "kv_seq", "kv_heads", None),
+    "v": ("batch", "kv_seq", "kv_heads", None),
+    "conv": ("batch", None, "mlp"),
+    "ssm": ("batch", "mlp", None),
+    "tok": ("batch", None, "embed"),
+    "wkv": ("batch", "heads", None, None),
+    "cm_tok": ("batch", None, "embed"),
+    "xk": ("batch", None, "kv_heads", None),
+    "xv": ("batch", None, "kv_heads", None),
+}
+
+
+def block_cache_spec(cfg: ModelConfig, batch: int, window: int,
+                     ctx: ModelContext) -> Dict[str, Any]:
+    return {f"sl{i}": sublayer_cache_spec(cfg, i, batch, window, ctx)
+            for i in range(cfg.block_len)}
+
+
+def init_cache(spec: Any) -> Any:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+
+
+# -- prefill: run full-sequence forward, produce filled caches --------------
+
+
+def sublayer_prefill(p, x, cache, cfg: ModelConfig, ctx: ModelContext, idx,
+                     mrope_positions=None):
+    """Like sublayer_forward but writes the cache. x: (B,S,D)."""
+    kind = cfg.sublayer_kinds()[idx]
+    dtype = ctx.compute_dtype
+    b, s, _ = x.shape
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind == "attn":
+        q, k, v = _project_qkv(p["core"], h, cfg, dtype)
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        q, k = apply_positional(q, k, cfg, positions, mrope_positions)
+        out = full_attention(q, k, v, cfg, q_chunk=ctx.q_chunk)
+        core = jnp.einsum("bshk,hkd->bsd", out, p["core"]["wo"].astype(dtype))
+        w = cache["k"].shape[1]
+        if w >= s:
+            newk = jnp.zeros_like(cache["k"]).at[:, :s].set(
+                k.astype(ctx.cache_dtype))
+            newv = jnp.zeros_like(cache["v"]).at[:, :s].set(
+                v.astype(ctx.cache_dtype))
+        else:  # keep last w (ring start aligned so slot = pos % w)
+            start = s - w
+            shift = start % w
+            tailk = jnp.roll(k[:, start:], shift, axis=1)
+            tailv = jnp.roll(v[:, start:], shift, axis=1)
+            newk = tailk.astype(ctx.cache_dtype)
+            newv = tailv.astype(ctx.cache_dtype)
+        new_cache = {"k": newk, "v": newv}
+    elif kind == "mamba":
+        core, (conv, ssm) = mamba_forward(
+            p["core"], h, cfg, dtype, chunk=ctx.mamba_chunk,
+            return_state=True)
+        new_cache = {"conv": conv, "ssm": ssm}
+    else:
+        core, (tok, wkv) = rwkv_time_mix(
+            p["core"], h, cfg, dtype, chunk=ctx.rwkv_chunk,
+            return_state=True)
+        new_cache = {"tok": tok, "wkv": wkv}
+    x = x + core
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if kind == "rwkv":
+        mlp, cm_tok = rwkv_channel_mix(p["mlp"], h, cfg, dtype,
+                                       return_state=True)
+        new_cache["cm_tok"] = cm_tok
+    elif cfg.sublayer_has_moe(idx):
+        mlp, _ = moe_ffn(p["mlp"], h, cfg, dtype, shard=ctx.shard)
+    else:
+        mlp = dense_ffn(p["mlp"], h, cfg, dtype)
+    x = x + mlp
+    x = ctx.shard(x, ("batch", "act_seq", "embed"))
+    return x, new_cache
+
+
+# -- decode: one token against caches ---------------------------------------
+
+
+def sublayer_decode(p, x, cache, pos, cfg: ModelConfig, ctx: ModelContext,
+                    idx, mrope_positions=None):
+    """x: (B,1,D); pos: (B,) valid-token count BEFORE this token."""
+    kind = cfg.sublayer_kinds()[idx]
+    dtype = ctx.compute_dtype
+    b = x.shape[0]
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind == "attn":
+        q, k, v = _project_qkv(p["core"], h, cfg, dtype)
+        q, k = apply_positional(q, k, cfg, pos[:, None], mrope_positions)
+        w = cache["k"].shape[1]
+        slot = pos[0] % w  # uniform position across batch
+        newk = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(ctx.cache_dtype), slot, axis=1)
+        newv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(ctx.cache_dtype), slot, axis=1)
+        out = decode_attention(q, newk.astype(dtype), newv.astype(dtype),
+                               pos + 1, cfg)
+        core = jnp.einsum("bshk,hkd->bsd", out,
+                          p["core"]["wo"].astype(dtype))
+        new_cache = {"k": newk, "v": newv}
+    elif kind == "mamba":
+        core, (conv, ssm) = mamba_decode_step(
+            p["core"], h, (cache["conv"], cache["ssm"]), cfg, dtype)
+        new_cache = {"conv": conv, "ssm": ssm}
+    else:
+        core, (tok, wkv) = rwkv_time_mix(
+            p["core"], h, cfg, dtype, chunk=1,
+            init_state=(cache["tok"], cache["wkv"]), return_state=True)
+        new_cache = {"tok": tok, "wkv": wkv}
+    x = x + core
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if kind == "rwkv":
+        mlp, cm_tok = rwkv_channel_mix(p["mlp"], h, cfg, dtype,
+                                       prev=cache["cm_tok"],
+                                       return_state=True)
+        new_cache["cm_tok"] = cm_tok
+    elif cfg.sublayer_has_moe(idx):
+        mlp, _ = moe_ffn(p["mlp"], h, cfg, dtype, shard=ctx.shard)
+    else:
+        mlp = dense_ffn(p["mlp"], h, cfg, dtype)
+    x = x + mlp
+    return x, new_cache
+
+
+def block_prefill(block_params, x, cache, cfg, ctx, mrope_positions=None):
+    new_cache = {}
+    for i in range(cfg.block_len):
+        x, new_cache[f"sl{i}"] = sublayer_prefill(
+            block_params[f"sl{i}"], x, cache[f"sl{i}"], cfg, ctx, i,
+            mrope_positions)
+    return x, new_cache
+
+
+def block_decode(block_params, x, cache, pos, cfg, ctx,
+                 mrope_positions=None):
+    new_cache = {}
+    for i in range(cfg.block_len):
+        x, new_cache[f"sl{i}"] = sublayer_decode(
+            block_params[f"sl{i}"], x, cache[f"sl{i}"], pos, cfg, ctx, i,
+            mrope_positions)
+    return x, new_cache

@@ -1,0 +1,133 @@
+"""Decoder-only language model: specs, train loss, prefill, decode.
+
+Layers run under ``lax.scan`` over stacked block parameters with
+``jax.checkpoint`` (remat) around the body — the paper-era recipe for
+training big models on HBM-limited accelerators.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.blocks import (ModelContext, block_cache_spec,
+                                 block_decode, block_forward, block_prefill,
+                                 block_specs, stack_specs)
+from repro.models.config import ModelConfig
+from repro.models.ops import embed_lookup, rms_norm, softmax_cross_entropy
+from repro.models.params import ParamSpec, ones_init
+
+Array = jax.Array
+
+AUX_WEIGHTS = {"load_balance": 0.01, "router_z": 0.001}
+
+
+def lm_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, v = cfg.d_model, cfg.vocab_size
+    specs: Dict[str, Any] = {
+        "embed": ParamSpec((v, d), ("vocab", "embed")),
+        "blocks": stack_specs(block_specs(cfg), cfg.n_blocks),
+        "final_norm": ParamSpec((d,), ("embed",), init=ones_init()),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec((d, v), ("embed", "vocab"))
+    return specs
+
+
+def _logits(params: Dict[str, Any], x: Array, cfg: ModelConfig,
+            ctx: ModelContext) -> Array:
+    if cfg.tie_embeddings:
+        head = params["embed"].astype(ctx.compute_dtype).T
+    else:
+        head = params["lm_head"].astype(ctx.compute_dtype)
+    logits = x @ head
+    return ctx.shard(logits, ("batch", "seq", "vocab"))
+
+
+def lm_loss(params: Dict[str, Any], batch: Dict[str, Array],
+            cfg: ModelConfig, ctx: ModelContext
+            ) -> Tuple[Array, Dict[str, Array]]:
+    tokens, labels = batch["tokens"], batch["labels"]
+    mrope = batch.get("positions")
+    x = embed_lookup(params["embed"], tokens, ctx.compute_dtype)
+    x = ctx.shard(x, ("batch", "act_seq", "embed"))
+
+    def body(x, bp):
+        x, aux = block_forward(bp, x, cfg, ctx, mrope)
+        out_aux = {k: jnp.asarray(aux.get(k, 0.0), jnp.float32)
+                   for k in AUX_WEIGHTS}
+        return x, out_aux
+
+    x, auxs = jax.lax.scan(jax.checkpoint(body), x, params["blocks"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, x, cfg, ctx)
+    mask = batch.get("loss_mask")
+    loss, count = softmax_cross_entropy(logits, labels, mask)
+    metrics = {"xent": loss, "tokens": count}
+    total = loss
+    for key, w in AUX_WEIGHTS.items():
+        if key in auxs:
+            val = auxs[key].mean()
+            metrics[key] = val
+            total = total + w * val
+    metrics["loss"] = total
+    return total, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def lm_cache_spec(cfg: ModelConfig, batch: int, window: int,
+                  ctx: ModelContext) -> Dict[str, Any]:
+    blocks = block_cache_spec(cfg, batch, window, ctx)
+    stacked = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((cfg.n_blocks, *s.shape), s.dtype),
+        blocks)
+    return {"blocks": stacked,
+            "pos": jax.ShapeDtypeStruct((batch,), jnp.int32)}
+
+
+def lm_prefill(params: Dict[str, Any], tokens: Array, cfg: ModelConfig,
+               ctx: ModelContext, window: int
+               ) -> Tuple[Array, Dict[str, Any]]:
+    """Full-sequence prefill. Returns (last-token logits, cache)."""
+    b, s = tokens.shape
+    x = embed_lookup(params["embed"], tokens, ctx.compute_dtype)
+    x = ctx.shard(x, ("batch", "act_seq", "embed"))
+    cache0 = jax.tree.map(
+        lambda sd: jnp.zeros(sd.shape, sd.dtype),
+        block_cache_spec(cfg, b, window, ctx))
+
+    def body(x, bp):
+        x, new_cache = block_prefill(bp, x, cache0, cfg, ctx)
+        return x, new_cache
+
+    x, caches = jax.lax.scan(jax.checkpoint(body), x, params["blocks"])
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, x, cfg, ctx)
+    pos = jnp.full((b,), s, jnp.int32)
+    return logits, {"blocks": caches, "pos": pos}
+
+
+def lm_decode_step(params: Dict[str, Any], token: Array,
+                   cache: Dict[str, Any], cfg: ModelConfig,
+                   ctx: ModelContext) -> Tuple[Array, Dict[str, Any]]:
+    """token: (B, 1) int32. Returns (logits (B,1,V), new cache)."""
+    pos = cache["pos"]
+    x = embed_lookup(params["embed"], token, ctx.compute_dtype)
+    x = ctx.shard(x, ("batch", None, "embed"))
+
+    def body(x, xs):
+        bp, bc = xs
+        x, nc = block_decode(bp, x, bc, pos, cfg, ctx)
+        return x, nc
+
+    x, new_blocks = jax.lax.scan(body, x, (params["blocks"],
+                                           cache["blocks"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, x, cfg, ctx)
+    return logits, {"blocks": new_blocks, "pos": pos + 1}

@@ -1,0 +1,159 @@
+"""Mamba (selective SSM) layer — the attention-free sublayer of Jamba.
+
+Training/prefill runs a chunked selective scan: ``lax.scan`` carries the
+(B, d_inner, N) state across chunks; within a chunk the linear recurrence
+h_t = dA_t * h_{t-1} + dB_t x_t is evaluated with ``associative_scan``
+(work-efficient, parallel over time). Decode is the single-step recurrence
+against cached (conv window, ssm state).
+
+The inner width d_inner is tensor-parallel over "model" (each shard owns a
+slice of channels; the recurrence is channel-local so no collectives are
+needed inside the scan — only the in/out projections communicate), which is
+exactly how the Megacore-style sharding applies to an attention-free arch.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.params import ParamSpec, constant_init, normal_init, \
+    ones_init, uniform_init, zeros_init
+
+Array = jax.Array
+
+
+def fit_chunk(seq: int, chunk: int) -> int:
+    """Largest divisor of ``seq`` that is <= ``chunk``."""
+    c = max(1, min(chunk, seq))
+    while seq % c:
+        c -= 1
+    return c
+
+
+def mamba_param_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, di, n, dr, w = (cfg.d_model, cfg.d_inner, cfg.ssm_state_dim,
+                       cfg.dt_rank, cfg.ssm_conv_width)
+
+    def a_log_init(key, shape, dtype):
+        # S4D-real initialization: A = -(1..N) per channel
+        a = jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32),
+                             shape)
+        return jnp.log(a).astype(dtype)
+
+    return {
+        "in_proj": ParamSpec((d, 2 * di), ("embed", "mlp")),
+        "conv_w": ParamSpec((w, di), ("conv", "mlp"),
+                            init=normal_init(0.1)),
+        "conv_b": ParamSpec((di,), ("mlp",), init=zeros_init()),
+        "x_proj": ParamSpec((di, dr + 2 * n), ("mlp", None)),
+        "dt_proj": ParamSpec((dr, di), (None, "mlp"),
+                             init=normal_init(dr ** -0.5)),
+        "dt_bias": ParamSpec((di,), ("mlp",),
+                             init=uniform_init(-4.6, -2.3)),  # softplus→dt
+        "a_log": ParamSpec((di, n), ("mlp", "state"), init=a_log_init),
+        "d_skip": ParamSpec((di,), ("mlp",), init=ones_init()),
+        "out_proj": ParamSpec((di, d), ("mlp", "embed")),
+    }
+
+
+def _ssm_scan_chunked(dA: Array, dBx: Array, h0: Array,
+                      chunk: int) -> Tuple[Array, Array]:
+    """Linear recurrence h_t = dA_t*h_{t-1} + dBx_t over time axis 1.
+
+    dA, dBx: (B, S, C, N). h0: (B, C, N). Returns (h_all (B,S,C,N), h_last).
+    """
+    b, s, c, n = dA.shape
+    if s % chunk:
+        raise ValueError(f"seq {s} % chunk {chunk} != 0")
+    nc = s // chunk
+    dA_c = dA.reshape(b, nc, chunk, c, n)
+    dBx_c = dBx.reshape(b, nc, chunk, c, n)
+
+    def body(h, xs):
+        a_ch, bx_ch = xs  # (B, chunk, C, N)
+        # prefix: contribution of incoming state decayed through the chunk
+        a_cum = jnp.cumprod(a_ch, axis=1)
+        carry_in = a_cum * h[:, None]
+        # intra-chunk recurrence via associative scan
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, bl * ar + br
+        _, h_intra = jax.lax.associative_scan(
+            combine, (a_ch, bx_ch), axis=1)
+        h_all = h_intra + carry_in
+        return h_all[:, -1], h_all
+
+    h_last, h_chunks = jax.lax.scan(
+        body, h0, (dA_c.transpose(1, 0, 2, 3, 4),
+                   dBx_c.transpose(1, 0, 2, 3, 4)))
+    h_all = h_chunks.transpose(1, 0, 2, 3, 4).reshape(b, s, c, n)
+    return h_all, h_last
+
+
+def mamba_forward(
+    params: Dict[str, Array], x: Array, cfg: ModelConfig, compute_dtype,
+    *,
+    chunk: int = 256,
+    init_state: Optional[Tuple[Array, Array]] = None,
+    return_state: bool = False,
+):
+    """x: (B, S, D). Returns out (B,S,D) [, (conv_cache, ssm_state)]."""
+    b, s, d = x.shape
+    di, n, dr, w = cfg.d_inner, cfg.ssm_state_dim, cfg.dt_rank, \
+        cfg.ssm_conv_width
+
+    xz = x @ params["in_proj"].astype(compute_dtype)  # (B,S,2di)
+    xin, z = jnp.split(xz, 2, axis=-1)
+
+    # depthwise causal conv over time
+    conv_cache_in = (init_state[0] if init_state is not None else
+                     jnp.zeros((b, w - 1, di), compute_dtype))
+    xpad = jnp.concatenate([conv_cache_in, xin], axis=1)  # (B, S+w-1, di)
+    conv_w = params["conv_w"].astype(compute_dtype)  # (w, di)
+    xc = sum(xpad[:, i:i + s, :] * conv_w[i] for i in range(w))
+    xc = jax.nn.silu((xc + params["conv_b"].astype(compute_dtype))
+                     .astype(jnp.float32)).astype(compute_dtype)
+    new_conv_cache = xpad[:, s:, :]  # last w-1 inputs
+
+    # input-dependent dt, B, C
+    dbc = xc @ params["x_proj"].astype(compute_dtype)  # (B,S,dr+2N)
+    dt_low, b_in, c_in = jnp.split(dbc, [dr, dr + n], axis=-1)
+    dt = jax.nn.softplus(
+        (dt_low @ params["dt_proj"].astype(compute_dtype)).astype(jnp.float32)
+        + params["dt_bias"].astype(jnp.float32))  # (B,S,di) fp32
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))  # (di, N)
+
+    dA = jnp.exp(dt[..., None] * a)  # (B,S,di,N) fp32
+    dBx = (dt * xc.astype(jnp.float32))[..., None] * \
+        b_in.astype(jnp.float32)[..., None, :]  # (B,S,di,N)
+
+    h0 = (init_state[1].astype(jnp.float32) if init_state is not None else
+          jnp.zeros((b, di, n), jnp.float32))
+    chunk = fit_chunk(s, chunk)
+    h_all, h_last = _ssm_scan_chunked(dA, dBx, h0, chunk)
+
+    y = jnp.einsum("bscn,bsn->bsc", h_all,
+                   c_in.astype(jnp.float32))  # (B,S,di)
+    y = y + params["d_skip"].astype(jnp.float32) * xc.astype(jnp.float32)
+    y = y.astype(compute_dtype) * jax.nn.silu(
+        z.astype(jnp.float32)).astype(compute_dtype)
+    out = y @ params["out_proj"].astype(compute_dtype)
+    if return_state:
+        return out, (new_conv_cache, h_last.astype(jnp.float32))
+    return out
+
+
+def mamba_decode_step(
+    params: Dict[str, Array], x: Array, state: Tuple[Array, Array],
+    cfg: ModelConfig, compute_dtype,
+) -> Tuple[Array, Tuple[Array, Array]]:
+    """Single-token step. x: (B, 1, D); state: (conv (B,w-1,di), h (B,di,N))."""
+    out, new_state = mamba_forward(
+        params, x, cfg, compute_dtype, chunk=1, init_state=state,
+        return_state=True)
+    return out, new_state

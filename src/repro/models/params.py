@@ -1,0 +1,112 @@
+"""Parameter specification and initialization (framework-native, no flax).
+
+A model is described by a pytree (nested dicts) of ``ParamSpec`` leaves.
+From the same spec tree we derive: initialized parameters (deterministic
+per-leaf keys folded from the path), the logical-axes tree for sharding,
+and ShapeDtypeStructs for dry-run lowering.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Initializer = Callable[[jax.Array, Tuple[int, ...], Any], jax.Array]
+
+
+def normal_init(stddev: float = 0.02) -> Initializer:
+    def init(key, shape, dtype):
+        return (jax.random.normal(key, shape, jnp.float32) * stddev).astype(
+            dtype)
+    return init
+
+
+def zeros_init() -> Initializer:
+    def init(key, shape, dtype):
+        return jnp.zeros(shape, dtype)
+    return init
+
+
+def ones_init() -> Initializer:
+    def init(key, shape, dtype):
+        return jnp.ones(shape, dtype)
+    return init
+
+
+def constant_init(value: float) -> Initializer:
+    def init(key, shape, dtype):
+        return jnp.full(shape, value, dtype)
+    return init
+
+
+def uniform_init(lo: float, hi: float) -> Initializer:
+    def init(key, shape, dtype):
+        return jax.random.uniform(
+            key, shape, jnp.float32, lo, hi).astype(dtype)
+    return init
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: Initializer = dataclasses.field(default_factory=normal_init)
+    dtype: Any = None  # None -> model default
+
+    def __post_init__(self) -> None:
+        if len(self.shape) != len(self.logical):
+            raise ValueError(
+                f"shape {self.shape} rank != logical {self.logical}")
+
+
+def is_spec(x: Any) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _fold_path(key: jax.Array, path: str) -> jax.Array:
+    # stable across processes: hash the path string
+    h = np.uint32(2166136261)
+    for ch in path.encode():
+        h = np.uint32((int(h) ^ ch) * 16777619 & 0xFFFFFFFF)
+    return jax.random.fold_in(key, int(h))
+
+
+def init_params(key: jax.Array, spec_tree: Any, default_dtype=jnp.float32):
+    """Materialize parameters; per-leaf keys folded from tree paths."""
+
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(
+        spec_tree, is_leaf=is_spec)[0]
+
+    def materialize(path, spec: ParamSpec):
+        path_str = "/".join(str(p) for p in path)
+        dtype = spec.dtype or default_dtype
+        return spec.init(_fold_path(key, path_str), spec.shape, dtype)
+
+    flat = [materialize(p, s) for p, s in leaves_with_paths]
+    treedef = jax.tree_util.tree_structure(spec_tree, is_leaf=is_spec)
+    return jax.tree_util.tree_unflatten(treedef, flat)
+
+
+def axes_tree(spec_tree: Any) -> Any:
+    return jax.tree.map(lambda s: s.logical, spec_tree, is_leaf=is_spec)
+
+
+def shapes_tree(spec_tree: Any, default_dtype=jnp.float32) -> Any:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype or default_dtype),
+        spec_tree, is_leaf=is_spec)
+
+
+def param_count(spec_tree: Any) -> int:
+    return sum(int(np.prod(s.shape))
+               for s in jax.tree.leaves(spec_tree, is_leaf=is_spec))
+
+
+def cast_tree(tree: Any, dtype) -> Any:
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(
+            x.dtype, jnp.floating) else x, tree)

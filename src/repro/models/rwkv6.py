@@ -1,0 +1,194 @@
+"""RWKV-6 "Finch" layer: linear attention with data-dependent decay.
+
+Recurrence per head (k-dim x v-dim state S):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    out_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+with w_t = exp(-exp(ww(x_t))) a per-channel, per-token decay (the "data-
+dependent decay" that distinguishes Finch from RWKV-5) and u a learned
+current-token bonus.
+
+Evaluation is chunk-parallel: the sequence is cut into small chunks; chunk
+boundary states are combined with ``associative_scan`` (elementwise decay ×
+rank-chunk updates), and intra-chunk interactions use bounded-exponent
+matmuls — per-step log-decay is clamped to >= DECAY_CLAMP so
+exp(cum[t-1]-cum[s]) stays in fp32 range for s,t within a chunk. The same
+math (same clamp) is the ref oracle for the Pallas kernel in kernels/.
+
+Decode carries (token_shift, state) — constant memory per sequence, which
+is why this arch runs the long_500k cell.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.params import ParamSpec, normal_init, ones_init, zeros_init
+
+Array = jax.Array
+
+DECAY_CLAMP = -4.0  # min per-step log decay; exp(16*4)=6e27 < fp32 max
+LORA_DECAY = 64
+LORA_MIX = 32
+
+
+def rwkv_param_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    h, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    return {
+        "r_proj": ParamSpec((d, d), ("embed", "heads")),
+        "k_proj": ParamSpec((d, d), ("embed", "heads")),
+        "v_proj": ParamSpec((d, d), ("embed", "heads")),
+        "g_proj": ParamSpec((d, d), ("embed", "heads")),
+        "o_proj": ParamSpec((d, d), ("heads", "embed")),
+        # data-dependent decay: low-rank adapter on x
+        "w_lora_a": ParamSpec((d, LORA_DECAY), ("embed", None)),
+        "w_lora_b": ParamSpec((LORA_DECAY, d), (None, "heads")),
+        "w_base": ParamSpec((d,), ("heads",), init=normal_init(0.5)),
+        # current-token bonus
+        "u_bonus": ParamSpec((h, hd), ("heads", None),
+                             init=normal_init(0.5)),
+        # token-shift mixing coefficients (r,k,v,g,w)
+        "mix": ParamSpec((5, d), (None, "heads"),
+                         init=normal_init(0.2)),
+    }
+
+
+def rwkv_channel_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    """Channel-mix (RWKV's MLP replacement)."""
+    d = cfg.d_model
+    return {
+        "cm_k": ParamSpec((d, cfg.d_ff), ("embed", "mlp")),
+        "cm_v": ParamSpec((cfg.d_ff, d), ("mlp", "embed")),
+        "cm_mix": ParamSpec((d,), ("heads",), init=normal_init(0.2)),
+    }
+
+
+def _token_shift(x: Array, prev: Optional[Array]) -> Array:
+    """x_{t-1} stream; prev: (B,1,D) carry for decode/chunked prefill."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def rwkv_time_mix(
+    params: Dict[str, Array], x: Array, cfg: ModelConfig, compute_dtype,
+    *,
+    chunk: int = 16,
+    init_state: Optional[Tuple[Array, Array]] = None,
+    return_state: bool = False,
+):
+    """x: (B,S,D) -> (B,S,D). State = (last_token (B,1,D), S (B,H,hd,hd))."""
+    b, s, d = x.shape
+    h, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    prev_tok = init_state[0] if init_state is not None else None
+    xs = _token_shift(x, prev_tok)
+    mix = params["mix"].astype(compute_dtype)  # (5, D)
+
+    def mixed(i):
+        return x + mix[i] * (xs - x)
+
+    r = (mixed(0) @ params["r_proj"].astype(compute_dtype)).reshape(
+        b, s, h, hd)
+    k = (mixed(1) @ params["k_proj"].astype(compute_dtype)).reshape(
+        b, s, h, hd)
+    v = (mixed(2) @ params["v_proj"].astype(compute_dtype)).reshape(
+        b, s, h, hd)
+    g = mixed(3) @ params["g_proj"].astype(compute_dtype)
+    ww = (mixed(4) @ params["w_lora_a"].astype(compute_dtype)
+          ) @ params["w_lora_b"].astype(compute_dtype)
+    logw = -jnp.exp(
+        (ww + params["w_base"].astype(compute_dtype)).astype(jnp.float32))
+    logw = jnp.clip(logw, DECAY_CLAMP, 0.0).reshape(b, s, h, hd)
+
+    from repro.models.mamba import fit_chunk
+    u = params["u_bonus"].astype(jnp.float32)  # (H, hd)
+    out, last_state = _chunked_wkv(
+        r.astype(jnp.float32), k.astype(jnp.float32),
+        v.astype(jnp.float32), logw, u,
+        init_state[1].astype(jnp.float32) if init_state is not None
+        else jnp.zeros((b, h, hd, hd), jnp.float32),
+        chunk=fit_chunk(s, chunk))
+    out = out.reshape(b, s, d).astype(compute_dtype)
+    out = out * jax.nn.silu(g.astype(jnp.float32)).astype(compute_dtype)
+    out = out @ params["o_proj"].astype(compute_dtype)
+    if return_state:
+        return out, (x[:, -1:], last_state)
+    return out
+
+
+def _chunked_wkv(r: Array, k: Array, v: Array, logw: Array, u: Array,
+                 s0: Array, chunk: int) -> Tuple[Array, Array]:
+    """Chunk-parallel WKV. r,k,v,logw: (B,S,H,hd) fp32; s0: (B,H,hd,hd).
+
+    Returns (out (B,S,H,hd), final_state)."""
+    b, s, h, hd = r.shape
+    if s % chunk:
+        raise ValueError(f"seq {s} % chunk {chunk}")
+    nc = s // chunk
+    rc = r.reshape(b, nc, chunk, h, hd)
+    kc = k.reshape(b, nc, chunk, h, hd)
+    vc = v.reshape(b, nc, chunk, h, hd)
+    lw = logw.reshape(b, nc, chunk, h, hd)
+
+    cum = jnp.cumsum(lw, axis=2)  # within-chunk cumulative log decay
+    total = cum[:, :, -1]  # (B,nc,H,hd)
+    # decays: key s contributes decayed by exp(total - cum[s]) to boundary
+    k_out = kc * jnp.exp(total[:, :, None] - cum)  # bounded: <= exp(0)
+    # per-chunk state update: S_out = diag(exp(total)) S_in + sum_s k~_s^T v_s
+    delta = jnp.einsum("bnchk,bnchv->bnhkv", k_out, vc)
+    a_fac = jnp.exp(total)  # (B,nc,H,hd) decay applied on k-dim
+
+    def combine(left, right):
+        al, bl = left
+        ar, br = right
+        return al * ar, bl * ar[..., None] + br
+
+    a_all, s_all = jax.lax.associative_scan(
+        combine, (a_fac.transpose(1, 0, 2, 3),
+                  delta.transpose(1, 0, 2, 3, 4)), axis=0)
+    # state at START of each chunk: shift right, include s0
+    s_all = s_all.transpose(1, 0, 2, 3, 4)  # (B,nc,H,hd,hd)
+    a_all = a_all.transpose(1, 0, 2, 3)
+    s_starts = jnp.concatenate(
+        [jnp.broadcast_to(s0[:, None], (b, 1, h, hd, hd)),
+         s_all[:, :-1] + s0[:, None] *
+         a_all[:, :-1][..., None]], axis=1)
+    s_final = s_all[:, -1] + s0 * a_all[:, -1][..., None]
+
+    # inter-chunk: r_t reads state decayed to t-1 (exclusive cumulative)
+    cum_excl = cum - lw  # log decay from chunk start to t-1
+    r_in = rc * jnp.exp(cum_excl)
+    inter = jnp.einsum("bnchk,bnhkv->bnchv", r_in, s_starts)
+
+    # intra-chunk: pairwise s<t with exponent cum_excl[t] - cum[s] <= 0
+    scores = jnp.einsum("bnchk,bnshk->bnhcs",
+                        rc * jnp.exp(cum_excl), kc * jnp.exp(-cum))
+    # the exp factors combine to exp(cum_excl[t] - cum[s]); mask s<t
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    scores = jnp.where(mask[None, None, None], scores, 0.0)
+    intra = jnp.einsum("bnhcs,bnshv->bnchv", scores, vc)
+    # current-token bonus: r_t . (u * k_t) v_t
+    bonus = jnp.einsum("bnchk,bnchk->bnch", rc, kc * u[None, None, None])
+    intra = intra + bonus[..., None] * vc
+
+    out = (inter + intra).reshape(b, s, h, hd)
+    return out, s_final
+
+
+def rwkv_channel_mix(params: Dict[str, Array], x: Array, cfg: ModelConfig,
+                     compute_dtype,
+                     prev: Optional[Array] = None,
+                     return_state: bool = False):
+    xs = _token_shift(x, prev)
+    mix = params["cm_mix"].astype(compute_dtype)
+    xm = x + mix * (xs - x)
+    hidden = jnp.square(jax.nn.relu(
+        (xm @ params["cm_k"].astype(compute_dtype)).astype(jnp.float32)))
+    out = hidden.astype(compute_dtype) @ params["cm_v"].astype(compute_dtype)
+    if return_state:
+        return out, x[:, -1:]
+    return out

@@ -1,0 +1,144 @@
+"""Resilient training driver: failure injection, OCS map-out, elastic
+re-mesh, straggler mitigation, goodput accounting.
+
+This is the paper's §Resilience as an executable loop:
+
+  detect (health checks / SDC screens / injected faults)
+    -> map out the failed cube via the OCS scheduler (spare substitution)
+    -> restore from the last checkpoint (elastic: the new slice may be
+       smaller or larger; arrays re-shard on load)
+    -> replay the deterministic pipeline from the restored step
+    -> goodput ledger charges detection + restore + rework.
+
+On this CPU container the "cluster" is simulated (FailurePlan injects
+failures at chosen steps; step time is measured wall time), but every state
+transition — checkpoint, scheduler substitution, re-mesh, replay — is the
+real code path the framework would run on a pod.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.goodput import GoodputLedger
+from repro.core.ocs import OCSPodScheduler
+from repro.data.pipeline import DataPipeline
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class FailurePlan:
+    """Deterministic injected failures: step -> cube id that dies there."""
+
+    failures: Dict[int, int] = dataclasses.field(default_factory=dict)
+    detect_s: float = 0.05
+    restore_extra_s: float = 0.05
+
+    def failure_at(self, step: int) -> Optional[int]:
+        return self.failures.get(step)
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    """Detect slow steps; after ``patience`` consecutive slow steps the
+    driver reports the node for map-out (the paper's modular-isolation
+    response to gray failures)."""
+
+    threshold: float = 3.0  # x median step time
+    patience: int = 3
+
+    def __post_init__(self) -> None:
+        self._times: List[float] = []
+        self._slow = 0
+
+    def observe(self, dt: float) -> bool:
+        self._times.append(dt)
+        if len(self._times) < 8:
+            return False
+        median = float(np.median(self._times[-50:]))
+        if dt > self.threshold * median:
+            self._slow += 1
+        else:
+            self._slow = 0
+        return self._slow >= self.patience
+
+
+@dataclasses.dataclass
+class ResilientTrainer:
+    train_step: Callable[[PyTree, Dict[str, Any]], Tuple[PyTree, Dict]]
+    pipeline: DataPipeline
+    ckpt: CheckpointManager
+    scheduler: OCSPodScheduler
+    job: str
+    checkpoint_every: int = 20
+    failure_plan: FailurePlan = dataclasses.field(default_factory=FailurePlan)
+    straggler: StragglerPolicy = dataclasses.field(
+        default_factory=StragglerPolicy)
+
+    def run(self, state: PyTree, num_steps: int,
+            ledger: Optional[GoodputLedger] = None
+            ) -> Tuple[PyTree, GoodputLedger, List[float]]:
+        ledger = ledger or GoodputLedger()
+        losses: List[float] = []
+        step = int(jax.device_get(state["step"]))
+        last_ckpt_step = step
+        while step < num_steps:
+            cube = self.failure_plan.failure_at(step)
+            if cube is not None:
+                # ---- failure path: detect -> map out -> restore -> replay
+                ledger.record_detection(self.failure_plan.detect_s,
+                                        note=f"cube {cube} died")
+                impacted = self.scheduler.fail_cube(cube)
+                patched = self.scheduler.substitute(self.job) \
+                    if impacted == self.job else None
+                if impacted == self.job and patched is None:
+                    raise RuntimeError(
+                        "no spare cubes: job cannot continue")
+                t0 = time.monotonic()
+                restore_step = self.ckpt.latest_step()
+                if restore_step is None:
+                    restore_step = 0
+                    state = state  # no checkpoint yet: restart from current
+                else:
+                    self.ckpt.wait()
+                    state = self.ckpt.restore(restore_step, state)
+                ledger.record_restore(
+                    time.monotonic() - t0 + self.failure_plan.restore_extra_s)
+                # rework: re-run steps since the checkpoint
+                rework_from = restore_step
+                t0 = time.monotonic()
+                for replay in range(rework_from, step):
+                    batch = self.pipeline.batch_for_step(replay)
+                    state, _ = self.train_step(state, batch)
+                ledger.record_rework(time.monotonic() - t0,
+                                     steps=step - rework_from)
+                # the failure is handled; do not re-trigger
+                del self.failure_plan.failures[step]
+                continue
+
+            batch = self.pipeline.batch_for_step(step)
+            t0 = time.monotonic()
+            state, metrics = self.train_step(state, batch)
+            loss = float(jax.device_get(metrics["loss"]))
+            dt = time.monotonic() - t0
+            ledger.record_steps(dt, steps=1)
+            losses.append(loss)
+            if self.straggler.observe(dt):
+                ledger.record_idle(0.0, note="straggler flagged for map-out")
+            step += 1
+            if step % self.checkpoint_every == 0:
+                state = jax.block_until_ready(state)
+                t0 = time.monotonic()
+                self.ckpt.save(step, state)  # async
+                ledger.record_idle(time.monotonic() - t0,
+                                   note="ckpt snapshot")
+                last_ckpt_step = step
+        self.ckpt.wait()
+        return state, ledger, losses

@@ -1,0 +1,77 @@
+"""Batched serving engine: prefill + decode with quantizable caches.
+
+A thin, jit-compiled engine over models/api: prefill a batch of prompts,
+then step the decode loop with greedy or temperature sampling. Weight-only
+quantization (fp8/int8 storage, bf16 compute) and int8 KV caches are the
+Ironwood-era memory levers that let the big assigned archs serve within a
+16 GiB/chip pod (see configs/*/SETTINGS).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import api
+from repro.models.blocks import ModelContext
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    cfg: ModelConfig
+    ctx: ModelContext
+    window: int
+
+    def __post_init__(self) -> None:
+        cfg, ctx = self.cfg, self.ctx
+
+        def prefill(params, batch):
+            return api.prefill_fn(params, batch, cfg, ctx, self.window)
+
+        def decode(params, token, cache):
+            return api.decode_fn(params, token, cache, cfg, ctx)
+
+        self._prefill = jax.jit(prefill)
+        self._decode = jax.jit(decode, donate_argnums=(2,))
+
+    def generate(self, params, batch: Dict[str, Array], *, max_new: int,
+                 temperature: float = 0.0,
+                 key: Optional[Array] = None) -> Array:
+        """Greedy (or sampled) generation. Returns (B, max_new) tokens."""
+        logits, cache = self._prefill(params, batch)
+        tokens = []
+        tok = self._pick(logits, temperature, key, 0)
+        for i in range(max_new):
+            tokens.append(tok)
+            logits, cache = self._decode(params, tok, cache)
+            key_i = (jax.random.fold_in(key, i + 1)
+                     if key is not None else None)
+            tok = self._pick(logits, temperature, key_i, i + 1)
+        return jnp.concatenate(tokens, axis=1)
+
+    @staticmethod
+    def _pick(logits: Array, temperature: float, key: Optional[Array],
+              i: int) -> Array:
+        last = logits[:, -1, :].astype(jnp.float32)
+        if temperature <= 0.0 or key is None:
+            return jnp.argmax(last, axis=-1)[:, None].astype(jnp.int32)
+        return jax.random.categorical(
+            key, last / temperature, axis=-1)[:, None].astype(jnp.int32)
+
+
+def quantize_weights(params: Any, dtype=jnp.float8_e4m3fn) -> Any:
+    """Weight-only storage quantization (embeddings/norms stay bf16)."""
+
+    def leaf(p: Array) -> Array:
+        if p.ndim >= 2 and jnp.issubdtype(p.dtype, jnp.floating):
+            return p.astype(dtype)
+        return p
+
+    return jax.tree.map(leaf, params)

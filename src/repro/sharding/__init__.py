@@ -1,0 +1,8 @@
+from repro.sharding.axes import (  # noqa: F401
+    AxisRules,
+    BASELINE_RULES,
+    FSDP_RULES,
+    logical_sharding,
+    logical_constraint,
+    resolve_spec,
+)

@@ -1,0 +1,15 @@
+# Convenience entry points. `make test` is the tier-1 gate from ROADMAP.md.
+
+.PHONY: test test-serve bench-serve serve-demo
+
+test:
+	./scripts/tier1.sh
+
+test-serve:
+	./scripts/tier1.sh tests/test_serve.py
+
+bench-serve:
+	PYTHONPATH=src python benchmarks/bench_serve.py
+
+serve-demo:
+	PYTHONPATH=src python examples/serve_decode.py

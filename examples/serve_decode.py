@@ -1,6 +1,7 @@
-"""Batched serving demo: prefill + decode over three model families
-(dense GQA, SWA MoE, attention-free RWKV), with fp8 weight-only
-quantization — the Ironwood serving recipe at smoke scale.
+"""Batched serving demo over three model families (dense GQA via the
+paged KV engine, SWA MoE via paged + fp8 weights, attention-free RWKV via
+the dense-slot engine) — the Ironwood serving recipe at smoke scale, now
+running the continuous-batching engine's device-resident decode loop.
 
   PYTHONPATH=src python examples/serve_decode.py
 """
@@ -32,7 +33,7 @@ def main() -> None:
         params = init_params(jax.random.key(0), api.model_specs(cfg))
         if quant is not None:
             params = quantize_weights(params, quant)
-        engine = ServeEngine(cfg, ctx, window=48)
+        engine = ServeEngine(cfg, ctx, window=48, max_batch=4, chunk=8)
         batch = {"tokens": jnp.asarray(
             rng.integers(0, cfg.vocab_size, (4, 16)), jnp.int32)}
         t0 = time.time()
@@ -40,8 +41,11 @@ def main() -> None:
                               temperature=0.8, key=jax.random.key(7))
         dt = time.time() - t0
         q = "fp8 weights" if quant is not None else "fp32 weights"
-        print(f"{arch:18s} [{q:12s}] 4x24 tokens in {dt:5.1f}s "
-              f"({4 * 24 / dt:6.1f} tok/s) sample={np.asarray(out[0])[:6]}")
+        mode = "paged" if engine.paged else "dense"
+        print(f"{arch:18s} [{q:12s}|{mode:5s}] 4x24 tokens in {dt:5.1f}s "
+              f"({4 * 24 / dt:6.1f} tok/s, "
+              f"{engine.counters['host_syncs']} host syncs) "
+              f"sample={np.asarray(out[0])[:6]}")
 
 
 if __name__ == "__main__":

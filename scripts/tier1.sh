@@ -1,0 +1,7 @@
+#!/usr/bin/env sh
+# Tier-1 verify (see ROADMAP.md). Runs everywhere: the test suite ships a
+# deterministic fallback for hypothesis (tests/optional_deps.py), so no
+# extra dependencies are required.
+set -e
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -38,7 +38,9 @@ def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    pos = pos_ref[0]  # valid token count (scalar, prefetched)
+    # per-request valid token count (prefetched); continuous batching
+    # serves different sequence lengths in one lockstep batch
+    pos = pos_ref[pl.program_id(0)]
     q = q_ref[0].astype(jnp.float32) * scale  # (H, d)
     k = k_ref[0].astype(jnp.float32)          # (bk, KV, d)
     bk, kv, d = k.shape
@@ -118,3 +120,110 @@ def decode_attention(
         out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
         interpret=interpret,
     )(pos, q, k_cache, v_cache)
+
+
+# ---------------------------------------------------------------------------
+# Paged variant: KV lives in a shared (N, P, KV, D) page pool; each grid
+# step DMAs one *page* selected through the scalar-prefetched page table —
+# the BlockSpec index_map reads ``table[b, j]``, so the gather happens at
+# DMA-issue time with no HBM materialization of a contiguous cache
+# (vLLM-style paged attention as a Pallas grid).
+# ---------------------------------------------------------------------------
+
+
+def _paged_decode_kernel(pos_ref, table_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *,
+                         page_size: int, n_pages: int,
+                         window: Optional[int], scale: float, groups: int):
+    ib, ij = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(ij == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[ib]
+    q = q_ref[0].astype(jnp.float32) * scale  # (H, d)
+    k = k_ref[0].astype(jnp.float32)          # (P, KV, d)
+    p, kv, d = k.shape
+    h = q.shape[0]
+    qg = q.reshape(kv, groups, d)
+    scores = jax.lax.dot_general(
+        qg, k, (((2,), (2,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32)  # (KV, groups, P)
+
+    # pages are append-only (no ring): absolute position == global slot
+    abs_pos = ij * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, 1, p), 2)
+    valid = abs_pos < pos
+    if window is not None:
+        valid &= abs_pos >= pos - window
+    scores = jnp.where(valid, scores, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, scores.max(axis=-1))
+    pr = jnp.exp(scores - m_new[..., None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + pr.sum(axis=-1)
+    v_f = v_ref[0].astype(jnp.float32)
+    pv = jax.lax.dot_general(
+        pr, v_f, (((2,), (0,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr[..., None] + pv
+    m_ref[...] = m_new
+
+    @pl.when(ij == n_pages - 1)
+    def _store():
+        denom = jnp.maximum(l_ref[...], 1e-30)[..., None]
+        o_ref[0, ...] = (acc_ref[...] / denom).reshape(h, d).astype(
+            o_ref.dtype)
+
+
+def paged_decode_attention(
+    q: Array, k_pages: Array, v_pages: Array, page_table: Array,
+    pos: Array, *,
+    window: Optional[int] = None,
+    interpret: bool = False,
+) -> Array:
+    """q: (B, H, D); pages: (N, P, KV, D); page_table: (B, M) int32 page
+    ids (unused entries point at the reserved trash page 0); pos: (B,)
+    per-request valid token count. Returns (B, H, D).
+
+    int8 pages are dequantized by the caller (jnp oracle path); this
+    kernel streams fp/bf pages.
+    """
+    b, h, d = q.shape
+    n, p, kv, _ = k_pages.shape
+    m = page_table.shape[1]
+    groups = h // kv
+    grid = (b, m)
+    scale = d ** -0.5
+    return pl.pallas_call(
+        functools.partial(
+            _paged_decode_kernel, page_size=p, n_pages=m, window=window,
+            scale=scale, groups=groups),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, h, d),
+                             lambda i, j, pos_ref, tab_ref: (i, 0, 0)),
+                pl.BlockSpec((1, p, kv, d),
+                             lambda i, j, pos_ref, tab_ref:
+                             (tab_ref[i, j], 0, 0, 0)),
+                pl.BlockSpec((1, p, kv, d),
+                             lambda i, j, pos_ref, tab_ref:
+                             (tab_ref[i, j], 0, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, h, d),
+                                   lambda i, j, pos_ref, tab_ref: (i, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((kv, groups), jnp.float32),
+                pltpu.VMEM((kv, groups), jnp.float32),
+                pltpu.VMEM((kv, groups, d), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=interpret,
+    )(pos, page_table, q, k_pages, v_pages)

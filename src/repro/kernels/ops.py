@@ -15,6 +15,8 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention as _decode_pl
+from repro.kernels.decode_attention import \
+    paged_decode_attention as _paged_decode_pl
 from repro.kernels.flash_attention import flash_attention as _flash_pl
 from repro.kernels.matmul import matmul as _matmul_pl
 from repro.kernels.rwkv_scan import rwkv_wkv as _wkv_pl
@@ -59,6 +61,25 @@ def decode_attention(q: Array, k_cache: Array, v_cache: Array, pos: Array,
                                         window=window)
     return _decode_pl(q, k_cache, v_cache, pos, window=window,
                       block_k=block_k, interpret=impl == "interpret")
+
+
+@partial(jax.jit, static_argnames=("impl", "window"))
+def paged_decode_attention(q: Array, k_pages: Array, v_pages: Array,
+                           page_table: Array, pos: Array, *,
+                           impl: str = "pallas",
+                           window: Optional[int] = None) -> Array:
+    """q: (B,H,D); pages (N,P,KV,D); page_table (B,M); pos (B,).
+
+    "ref" gathers the pages and reuses the dense ring oracle (no wraps:
+    every absolute position is < M*P by construction)."""
+    if impl == "ref":
+        n, p, kv, d = k_pages.shape
+        b, m = page_table.shape
+        kg = k_pages[page_table].reshape(b, m * p, kv, d)
+        vg = v_pages[page_table].reshape(b, m * p, kv, d)
+        return ref.decode_attention_ref(q, kg, vg, pos, window=window)
+    return _paged_decode_pl(q, k_pages, v_pages, page_table, pos,
+                            window=window, interpret=impl == "interpret")
 
 
 @partial(jax.jit, static_argnames=("impl", "chunk"))

@@ -17,21 +17,28 @@ from typing import Optional, Sequence, Tuple
 import numpy as np
 
 
+def _auto_axis_types(n: int) -> dict:
+    """axis_types kwarg when this jax has AxisType (>=0.5); Auto is already
+    the default on older versions, so omit it there."""
+    import jax
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     import jax
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_auto_axis_types(len(axes)))
 
 
 def make_mesh(shape: Sequence[int], axes: Sequence[str]):
     """Arbitrary mesh (tests use small ones, e.g. (2,2,2) on 8 devices)."""
     import jax
-    return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         **_auto_axis_types(len(shape)))
 
 
 def mesh_for_devices(n: int, *, multi_pod: bool = False):

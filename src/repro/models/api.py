@@ -38,16 +38,46 @@ def cache_spec(cfg: ModelConfig, batch: int, window: int,
 
 
 def prefill_fn(params, batch, cfg: ModelConfig, ctx: ModelContext,
-               window: int):
+               window: int, logits_at=None):
+    """``logits_at`` (B,): index of the position whose logits to return
+    (decoder-only; lets servers pad prompts to one compile length)."""
     if cfg.is_encoder_decoder:
+        if logits_at is not None:
+            raise NotImplementedError(
+                "logits_at requires a decoder-only model")
         return encdec.encdec_prefill(params, batch, cfg, ctx, window)
-    return lm.lm_prefill(params, batch["tokens"], cfg, ctx, window)
+    return lm.lm_prefill(params, batch["tokens"], cfg, ctx, window,
+                         logits_at=logits_at)
 
 
 def decode_fn(params, token, cache, cfg: ModelConfig, ctx: ModelContext):
     if cfg.is_encoder_decoder:
         return encdec.encdec_decode_step(params, token, cache, cfg, ctx)
     return lm.lm_decode_step(params, token, cache, cfg, ctx)
+
+
+def supports_paged_decode(cfg: ModelConfig) -> bool:
+    """Paged KV applies to pure-attention decoder-only stacks; SSM/RWKV
+    sublayers carry O(1) state and encoder-decoder keeps cross-KV."""
+    return (not cfg.is_encoder_decoder
+            and set(cfg.sublayer_kinds()) == {"attn"})
+
+
+def paged_state_spec(cfg: ModelConfig, num_pages: int, page_size: int,
+                     max_batch: int, max_pages_per_seq: int,
+                     ctx: ModelContext) -> Dict[str, Any]:
+    if not supports_paged_decode(cfg):
+        raise ValueError(f"{cfg.name}: no paged decode for this family")
+    return lm.lm_paged_state_spec(cfg, num_pages, page_size, max_batch,
+                                  max_pages_per_seq, ctx)
+
+
+def decode_paged_fn(params, token, state, cfg: ModelConfig,
+                    ctx: ModelContext):
+    """One decode step against the paged KV pool (see blocks.py)."""
+    if not supports_paged_decode(cfg):
+        raise ValueError(f"{cfg.name}: no paged decode for this family")
+    return lm.lm_decode_step_paged(params, token, state, cfg, ctx)
 
 
 def train_batch_specs(cfg: ModelConfig, batch: int,

@@ -47,7 +47,7 @@ class ModelContext:
     def __init__(self, *, compute_dtype=jnp.bfloat16, q_chunk: int = 2048,
                  shard: ShardFn = _identity_shard, mamba_chunk: int = 256,
                  rwkv_chunk: int = 16, attn_impl: str = "xla",
-                 decode_cache_dtype=None):
+                 decode_cache_dtype=None, full_cache_window: bool = False):
         self.compute_dtype = compute_dtype
         self.q_chunk = q_chunk
         self.shard = shard
@@ -55,6 +55,10 @@ class ModelContext:
         self.rwkv_chunk = rwkv_chunk
         self.attn_impl = attn_impl
         self.decode_cache_dtype = decode_cache_dtype  # None -> compute dtype
+        # keep absolute (non-ring) KV slots even for sliding-window archs;
+        # paged serving scatters prefill caches into append-only pages and
+        # relies on the attention mask (not the ring) to bound the window
+        self.full_cache_window = full_cache_window
 
     @property
     def cache_dtype(self):
@@ -214,7 +218,7 @@ def sublayer_cache_spec(cfg: ModelConfig, idx: int, batch: int,
     cdt = ctx.cache_dtype
     if kind == "attn":
         w = window
-        if cfg.sliding_window is not None:
+        if cfg.sliding_window is not None and not ctx.full_cache_window:
             w = min(window, cfg.sliding_window)
         return {
             "k": jax.ShapeDtypeStruct((batch, w, cfg.n_kv_heads, hd), cdt),
@@ -310,7 +314,8 @@ def sublayer_prefill(p, x, cache, cfg: ModelConfig, ctx: ModelContext, idx,
                                        return_state=True)
         new_cache["cm_tok"] = cm_tok
     elif cfg.sublayer_has_moe(idx):
-        mlp, _ = moe_ffn(p["mlp"], h, cfg, dtype, shard=ctx.shard)
+        mlp, _ = moe_ffn(p["mlp"], h, cfg, dtype, shard=ctx.shard,
+                         dropless=True)
     else:
         mlp = dense_ffn(p["mlp"], h, cfg, dtype)
     x = x + mlp
@@ -323,7 +328,11 @@ def sublayer_prefill(p, x, cache, cfg: ModelConfig, ctx: ModelContext, idx,
 
 def sublayer_decode(p, x, cache, pos, cfg: ModelConfig, ctx: ModelContext,
                     idx, mrope_positions=None):
-    """x: (B,1,D); pos: (B,) valid-token count BEFORE this token."""
+    """x: (B,1,D); pos: (B,) valid-token count BEFORE this token.
+
+    ``pos`` is per-request: a continuous-batching server decodes requests
+    of different lengths in one lockstep batch, so each row writes its own
+    ring slot and masks its own validity window."""
     kind = cfg.sublayer_kinds()[idx]
     dtype = ctx.compute_dtype
     b = x.shape[0]
@@ -332,11 +341,12 @@ def sublayer_decode(p, x, cache, pos, cfg: ModelConfig, ctx: ModelContext,
         q, k, v = _project_qkv(p["core"], h, cfg, dtype)
         q, k = apply_positional(q, k, cfg, pos[:, None], mrope_positions)
         w = cache["k"].shape[1]
-        slot = pos[0] % w  # uniform position across batch
-        newk = jax.lax.dynamic_update_slice_in_dim(
-            cache["k"], k.astype(ctx.cache_dtype), slot, axis=1)
-        newv = jax.lax.dynamic_update_slice_in_dim(
-            cache["v"], v.astype(ctx.cache_dtype), slot, axis=1)
+        bidx = jnp.arange(b)
+        slot = pos % w  # (B,) per-request ring slot
+        newk = cache["k"].at[bidx, slot].set(
+            k[:, 0].astype(ctx.cache_dtype))
+        newv = cache["v"].at[bidx, slot].set(
+            v[:, 0].astype(ctx.cache_dtype))
         out = decode_attention(q, newk.astype(dtype), newv.astype(dtype),
                                pos + 1, cfg)
         core = jnp.einsum("bshk,hkd->bsd", out,
@@ -359,7 +369,8 @@ def sublayer_decode(p, x, cache, pos, cfg: ModelConfig, ctx: ModelContext,
                                        return_state=True)
         new_cache["cm_tok"] = cm_tok
     elif cfg.sublayer_has_moe(idx):
-        mlp, _ = moe_ffn(p["mlp"], h, cfg, dtype, shard=ctx.shard)
+        mlp, _ = moe_ffn(p["mlp"], h, cfg, dtype, shard=ctx.shard,
+                         dropless=True)
     else:
         mlp = dense_ffn(p["mlp"], h, cfg, dtype)
     x = x + mlp
@@ -383,3 +394,117 @@ def block_decode(block_params, x, cache, pos, cfg, ctx,
             block_params[f"sl{i}"], x, cache[f"sl{i}"], pos, cfg, ctx, i,
             mrope_positions)
     return x, new_cache
+
+
+# -- paged decode: block/paged KV cache (serving) ---------------------------
+#
+# Pages are a shared pool per layer: k/v of shape (num_pages, page_size,
+# KV, D), plus optional per-slot dequant scales when the cache dtype is
+# int8. A request owns a list of page ids (its ``page_table`` row, padded
+# with the reserved trash page 0); token ``p`` lives in page
+# ``table[p // page_size]`` at slot ``p % page_size``. Only attention
+# sublayers have paged state — state-space/RWKV layers carry O(1) state and
+# gain nothing from paging.
+
+
+def paged_quantize(x: Array, dtype) -> Tuple[Array, Optional[Array]]:
+    """Per-(token, kv-head) symmetric int8 quantization hook.
+
+    x: (..., KV, D). Returns (stored, scale or None); scale shape (..., KV).
+    """
+    if dtype != jnp.int8:
+        return x.astype(dtype), None
+    scale = jnp.maximum(jnp.max(jnp.abs(x), axis=-1), 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def paged_dequantize(x: Array, scale: Optional[Array], dtype) -> Array:
+    if scale is None:
+        return x.astype(dtype)
+    return (x.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def paged_sublayer_cache_spec(cfg: ModelConfig, num_pages: int,
+                              page_size: int, ctx: ModelContext
+                              ) -> Dict[str, Any]:
+    hd, kv = cfg.resolved_head_dim, cfg.n_kv_heads
+    cdt = ctx.cache_dtype
+    spec = {
+        "k": jax.ShapeDtypeStruct((num_pages, page_size, kv, hd), cdt),
+        "v": jax.ShapeDtypeStruct((num_pages, page_size, kv, hd), cdt),
+    }
+    if cdt == jnp.int8:
+        spec["k_scale"] = jax.ShapeDtypeStruct(
+            (num_pages, page_size, kv), jnp.float32)
+        spec["v_scale"] = jax.ShapeDtypeStruct(
+            (num_pages, page_size, kv), jnp.float32)
+    return spec
+
+
+def paged_block_cache_spec(cfg: ModelConfig, num_pages: int, page_size: int,
+                           ctx: ModelContext) -> Dict[str, Any]:
+    kinds = set(cfg.sublayer_kinds())
+    if kinds != {"attn"}:
+        raise ValueError(
+            f"paged KV serving requires a pure-attention stack, got {kinds}")
+    return {f"sl{i}": paged_sublayer_cache_spec(cfg, num_pages, page_size,
+                                                ctx)
+            for i in range(cfg.block_len)}
+
+
+def _paged_gather(pages: Dict[str, Array], page_table: Array, dtype
+                  ) -> Tuple[Array, Array]:
+    """Materialize each request's KV view: (B, M*P, KV, D) in ``dtype``."""
+    _, p, kv, hd = pages["k"].shape
+    b, m = page_table.shape
+    ks, vs = pages.get("k_scale"), pages.get("v_scale")
+    kg = paged_dequantize(pages["k"][page_table],
+                          None if ks is None else ks[page_table], dtype)
+    vg = paged_dequantize(pages["v"][page_table],
+                          None if vs is None else vs[page_table], dtype)
+    shape = (b, m * p, kv, hd)
+    return kg.reshape(shape), vg.reshape(shape)
+
+
+def sublayer_decode_paged(p, x, pages, page_table, pos, cfg: ModelConfig,
+                          ctx: ModelContext, idx):
+    """One-token decode against the paged pool. x: (B,1,D); pos: (B,)."""
+    dtype = ctx.compute_dtype
+    b = x.shape[0]
+    page_size = pages["k"].shape[1]
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = _project_qkv(p["core"], h, cfg, dtype)
+    q, k = apply_positional(q, k, cfg, pos[:, None], None)
+    bidx = jnp.arange(b)
+    pid = page_table[bidx, pos // page_size]  # (B,) owning page
+    slot = pos % page_size
+    kq, ks = paged_quantize(k[:, 0], ctx.cache_dtype)
+    vq, vs = paged_quantize(v[:, 0], ctx.cache_dtype)
+    new_pages = dict(pages)
+    new_pages["k"] = pages["k"].at[pid, slot].set(kq)
+    new_pages["v"] = pages["v"].at[pid, slot].set(vq)
+    if ks is not None:
+        new_pages["k_scale"] = pages["k_scale"].at[pid, slot].set(ks)
+        new_pages["v_scale"] = pages["v_scale"].at[pid, slot].set(vs)
+    kg, vg = _paged_gather(new_pages, page_table, dtype)
+    out = decode_attention(q, kg, vg, pos + 1, cfg)
+    core = jnp.einsum("bshk,hkd->bsd", out, p["core"]["wo"].astype(dtype))
+    x = x + core
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.sublayer_has_moe(idx):
+        mlp, _ = moe_ffn(p["mlp"], h, cfg, dtype, shard=ctx.shard,
+                         dropless=True)
+    else:
+        mlp = dense_ffn(p["mlp"], h, cfg, dtype)
+    x = x + mlp
+    return x, new_pages
+
+
+def block_decode_paged(block_params, x, pages, page_table, pos, cfg, ctx):
+    new_pages = {}
+    for i in range(cfg.block_len):
+        x, new_pages[f"sl{i}"] = sublayer_decode_paged(
+            block_params[f"sl{i}"], x, pages[f"sl{i}"], page_table, pos,
+            cfg, ctx, i)
+    return x, new_pages

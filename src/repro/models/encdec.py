@@ -215,19 +215,18 @@ def encdec_decode_step(params, token, cache, cfg: ModelConfig,
     b = token.shape[0]
     dtype = ctx.compute_dtype
     x = embed_lookup(params["embed"], token, dtype)
-    x = x + jax.lax.dynamic_index_in_dim(
-        params["dec_pos"], pos[0], axis=0, keepdims=False).astype(dtype)
+    # per-request positions (continuous batching decodes mixed lengths)
+    x = x + jnp.take(params["dec_pos"], pos, axis=0)[:, None].astype(dtype)
 
     def body(x, xs):
         lp, bc = xs
         h = _ln(lp["ln1"], x, cfg.norm_eps)
         q, k, v = _project_qkv(lp["attn"], h, cfg, dtype)
         w = bc["k"].shape[1]
-        slot = pos[0] % w
-        newk = jax.lax.dynamic_update_slice_in_dim(
-            bc["k"], k.astype(ctx.cache_dtype), slot, axis=1)
-        newv = jax.lax.dynamic_update_slice_in_dim(
-            bc["v"], v.astype(ctx.cache_dtype), slot, axis=1)
+        bidx = jnp.arange(b)
+        slot = pos % w  # (B,)
+        newk = bc["k"].at[bidx, slot].set(k[:, 0].astype(ctx.cache_dtype))
+        newv = bc["v"].at[bidx, slot].set(v[:, 0].astype(ctx.cache_dtype))
         out = decode_attention(q, newk.astype(dtype), newv.astype(dtype),
                                pos + 1, cfg)
         x = x + jnp.einsum("bshk,hkd->bsd", out,

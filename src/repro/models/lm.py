@@ -13,8 +13,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.blocks import (ModelContext, block_cache_spec,
-                                 block_decode, block_forward, block_prefill,
-                                 block_specs, stack_specs)
+                                 block_decode, block_decode_paged,
+                                 block_forward, block_prefill, block_specs,
+                                 paged_block_cache_spec, stack_specs)
 from repro.models.config import ModelConfig
 from repro.models.ops import embed_lookup, rms_norm, softmax_cross_entropy
 from repro.models.params import ParamSpec, ones_init
@@ -92,9 +93,15 @@ def lm_cache_spec(cfg: ModelConfig, batch: int, window: int,
 
 
 def lm_prefill(params: Dict[str, Any], tokens: Array, cfg: ModelConfig,
-               ctx: ModelContext, window: int
+               ctx: ModelContext, window: int,
+               logits_at: Optional[Array] = None
                ) -> Tuple[Array, Dict[str, Any]]:
-    """Full-sequence prefill. Returns (last-token logits, cache)."""
+    """Full-sequence prefill. Returns (last-token logits, cache).
+
+    ``logits_at`` (B,) selects the position whose logits are returned
+    (default: the last). Servers that pad prompts to a fixed compile
+    length pass the true last-token index per request here; under causal
+    attention the padded tail never influences the valid prefix."""
     b, s = tokens.shape
     x = embed_lookup(params["embed"], tokens, ctx.compute_dtype)
     x = ctx.shard(x, ("batch", "act_seq", "embed"))
@@ -107,9 +114,15 @@ def lm_prefill(params: Dict[str, Any], tokens: Array, cfg: ModelConfig,
         return x, new_cache
 
     x, caches = jax.lax.scan(jax.checkpoint(body), x, params["blocks"])
-    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
-    logits = _logits(params, x, cfg, ctx)
-    pos = jnp.full((b,), s, jnp.int32)
+    if logits_at is None:
+        xl = x[:, -1:]
+        pos = jnp.full((b,), s, jnp.int32)
+    else:
+        idx = jnp.broadcast_to(logits_at[:, None, None], (b, 1, x.shape[-1]))
+        xl = jnp.take_along_axis(x, idx, axis=1)
+        pos = logits_at.astype(jnp.int32) + 1
+    xl = rms_norm(xl, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, xl, cfg, ctx)
     return logits, {"blocks": caches, "pos": pos}
 
 
@@ -131,3 +144,45 @@ def lm_decode_step(params: Dict[str, Any], token: Array,
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = _logits(params, x, cfg, ctx)
     return logits, {"blocks": new_blocks, "pos": pos + 1}
+
+
+# -- paged serving state ----------------------------------------------------
+
+
+def lm_paged_state_spec(cfg: ModelConfig, num_pages: int, page_size: int,
+                        max_batch: int, max_pages_per_seq: int,
+                        ctx: ModelContext) -> Dict[str, Any]:
+    """ShapeDtypeStructs for the paged decode state (see blocks.py)."""
+    per_block = paged_block_cache_spec(cfg, num_pages, page_size, ctx)
+    stacked = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((cfg.n_blocks, *s.shape), s.dtype),
+        per_block)
+    return {
+        "pages": stacked,
+        "page_table": jax.ShapeDtypeStruct(
+            (max_batch, max_pages_per_seq), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((max_batch,), jnp.int32),
+    }
+
+
+def lm_decode_step_paged(params: Dict[str, Any], token: Array,
+                         state: Dict[str, Any], cfg: ModelConfig,
+                         ctx: ModelContext) -> Tuple[Array, Dict[str, Any]]:
+    """token: (B, 1) int32 against the paged pool.
+
+    Returns (logits (B,1,V), new state with pos advanced). Callers that
+    freeze finished requests overwrite ``pos`` afterwards."""
+    pos = state["pos"]
+    table = state["page_table"]
+    x = embed_lookup(params["embed"], token, ctx.compute_dtype)
+    x = ctx.shard(x, ("batch", None, "embed"))
+
+    def body(x, xs):
+        bp, layer_pages = xs
+        x, np_ = block_decode_paged(bp, x, layer_pages, table, pos, cfg, ctx)
+        return x, np_
+
+    x, new_pages = jax.lax.scan(body, x, (params["blocks"], state["pages"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, x, cfg, ctx)
+    return logits, {"pages": new_pages, "page_table": table, "pos": pos + 1}

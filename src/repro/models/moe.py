@@ -60,12 +60,21 @@ def _noshard(x, logical):
 def moe_ffn(params: Dict[str, Array], x: Array, cfg: ModelConfig,
             compute_dtype,
             chunk_tokens: int = MOE_CHUNK_TOKENS,
-            shard=_noshard) -> Tuple[Array, Dict[str, Array]]:
+            shard=_noshard,
+            dropless: bool = False) -> Tuple[Array, Dict[str, Array]]:
     """x: (B, S, D) -> (out, aux_losses).
 
     Token count above ``chunk_tokens`` is processed in sequence-chunks
     (scan), bounding dispatch-buffer memory; capacity is then per-chunk,
-    which is the standard serving/prefill trade-off."""
+    which is the standard serving/prefill trade-off.
+
+    ``dropless=True`` sizes the dispatch buffer so no assignment can
+    overflow (capacity = chunk token count): each token's output becomes
+    independent of the rest of the batch. Serving paths require this —
+    with capacity drops, prefill results depend on how many other tokens
+    share the dispatch, so an incremental decode can never bit-match a
+    longer prefill. Training keeps the capacity-dropping GShard dispatch
+    (the load-balance pressure the aux losses assume)."""
     b, s, d = x.shape
     if b * s > chunk_tokens and (b * s) % chunk_tokens == 0 and \
             s % (b * s // chunk_tokens) == 0:
@@ -74,18 +83,19 @@ def moe_ffn(params: Dict[str, Array], x: Array, cfg: ModelConfig,
         xc = x.reshape(b, n_chunks, sc, d).transpose(1, 0, 2, 3)
 
         def body(_, xi):
-            out, aux = _moe_ffn_flat(params, xi, cfg, compute_dtype, shard)
+            out, aux = _moe_ffn_flat(params, xi, cfg, compute_dtype, shard,
+                                     dropless)
             return None, (out, aux)
 
         _, (outs, auxs) = jax.lax.scan(body, None, xc)
         out = outs.transpose(1, 0, 2, 3).reshape(b, s, d)
         aux = jax.tree.map(lambda a: a.mean(0), auxs)
         return out, aux
-    return _moe_ffn_flat(params, x, cfg, compute_dtype, shard)
+    return _moe_ffn_flat(params, x, cfg, compute_dtype, shard, dropless)
 
 
 def _moe_ffn_flat(params: Dict[str, Array], x: Array, cfg: ModelConfig,
-                  compute_dtype, shard=_noshard
+                  compute_dtype, shard=_noshard, dropless: bool = False
                   ) -> Tuple[Array, Dict[str, Array]]:
     b, s, d = x.shape
     t = b * s
@@ -97,7 +107,9 @@ def _moe_ffn_flat(params: Dict[str, Array], x: Array, cfg: ModelConfig,
     gate_w, gate_idx = jax.lax.top_k(probs, k)  # (T, k)
     gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
 
-    cap = capacity(t, cfg)
+    # An expert receives at most one assignment per token (top-k indices are
+    # distinct), so capacity = t can never drop.
+    cap = t if dropless else capacity(t, cfg)
     # Priority order: all top-1 assignments, then top-2, ... (GShard).
     flat_idx = gate_idx.T.reshape(-1)  # (k*T,)
     onehot = jax.nn.one_hot(flat_idx, e, dtype=jnp.int32)  # (kT, E)

@@ -70,6 +70,21 @@ class StragglerPolicy:
         return self._slow >= self.patience
 
 
+@dataclasses.dataclass(frozen=True)
+class StepRecord:
+    """One train_step execution, replayed or not.
+
+    ``losses`` (the per-step effective trace) intentionally excludes
+    replays so an interrupted run compares 1:1 against an uninterrupted
+    one; ``records`` keeps every execution with its provenance for the
+    goodput/rework post-mortem."""
+
+    step: int
+    loss: float
+    replayed: bool = False
+    duration_s: float = 0.0
+
+
 @dataclasses.dataclass
 class ResilientTrainer:
     train_step: Callable[[PyTree, Dict[str, Any]], Tuple[PyTree, Dict]]
@@ -87,8 +102,19 @@ class ResilientTrainer:
             ) -> Tuple[PyTree, GoodputLedger, List[float]]:
         ledger = ledger or GoodputLedger()
         losses: List[float] = []
+        self.records: List[StepRecord] = []
         step = int(jax.device_get(state["step"]))
-        last_ckpt_step = step
+        last_ckpt_step = self.ckpt.latest_step()
+        if last_ckpt_step is None:
+            # Bootstrap: the resilience contract says recovery always
+            # restores from a checkpoint. Before the first periodic
+            # snapshot exists, a failure would otherwise have nothing to
+            # restore — write the starting state synchronously.
+            t0 = time.monotonic()
+            self.ckpt.save(step, state, blocking=True)
+            ledger.record_idle(time.monotonic() - t0,
+                               note="bootstrap ckpt")
+            last_ckpt_step = step
         while step < num_steps:
             cube = self.failure_plan.failure_at(step)
             if cube is not None:
@@ -102,23 +128,28 @@ class ResilientTrainer:
                     raise RuntimeError(
                         "no spare cubes: job cannot continue")
                 t0 = time.monotonic()
+                # Flush any in-flight async snapshot BEFORE asking what the
+                # latest checkpoint is: querying first races the writer
+                # thread, and losing that race silently "replays" from an
+                # older step than the state actually holds.
+                self.ckpt.wait()
                 restore_step = self.ckpt.latest_step()
-                if restore_step is None:
-                    restore_step = 0
-                    state = state  # no checkpoint yet: restart from current
-                else:
-                    self.ckpt.wait()
-                    state = self.ckpt.restore(restore_step, state)
+                assert restore_step is not None  # bootstrap guarantees one
+                state = self.ckpt.restore(restore_step, state)
+                last_ckpt_step = restore_step
                 ledger.record_restore(
                     time.monotonic() - t0 + self.failure_plan.restore_extra_s)
                 # rework: re-run steps since the checkpoint
-                rework_from = restore_step
                 t0 = time.monotonic()
-                for replay in range(rework_from, step):
+                for replay in range(restore_step, step):
                     batch = self.pipeline.batch_for_step(replay)
-                    state, _ = self.train_step(state, batch)
+                    state, metrics = self.train_step(state, batch)
+                    self.records.append(StepRecord(
+                        step=replay,
+                        loss=float(jax.device_get(metrics["loss"])),
+                        replayed=True))
                 ledger.record_rework(time.monotonic() - t0,
-                                     steps=step - rework_from)
+                                     steps=step - restore_step)
                 # the failure is handled; do not re-trigger
                 del self.failure_plan.failures[step]
                 continue
@@ -130,6 +161,8 @@ class ResilientTrainer:
             dt = time.monotonic() - t0
             ledger.record_steps(dt, steps=1)
             losses.append(loss)
+            self.records.append(StepRecord(step=step, loss=loss,
+                                           duration_s=dt))
             if self.straggler.observe(dt):
                 ledger.record_idle(0.0, note="straggler flagged for map-out")
             step += 1

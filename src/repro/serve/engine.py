@@ -1,69 +1,424 @@
-"""Batched serving engine: prefill + decode with quantizable caches.
+"""Continuous-batching serving engine with a device-resident decode loop.
 
-A thin, jit-compiled engine over models/api: prefill a batch of prompts,
-then step the decode loop with greedy or temperature sampling. Weight-only
-quantization (fp8/int8 storage, bf16 compute) and int8 KV caches are the
-Ironwood-era memory levers that let the big assigned archs serve within a
-16 GiB/chip pod (see configs/*/SETTINGS).
+The Ironwood-era premise: serving is a first-class supercomputer workload,
+so the engine is built like one —
+
+  * **Continuous batching** (scheduler.py): requests are admitted into
+    free batch slots and drained *mid-decode*; finished or preempted
+    slots refill without flushing the batch.
+  * **Block/paged KV cache** (kv_cache.py): pure-attention stacks store
+    KV in a shared page pool addressed through a device page table, with
+    int8 page quantization as the HBM lever; other families (Mamba/RWKV/
+    enc-dec) use per-slot dense ring/state caches behind the same
+    interface.
+  * **Device-resident decode** : the hot loop is a ``lax.scan`` of
+    ``chunk`` decode steps compiled once — sample, EOS/budget masking,
+    cache write and position bookkeeping all stay on device. The host
+    syncs once per *chunk* (not per token) to drain emitted tokens and
+    make scheduling decisions.
+
+The legacy single-batch ``generate()`` survives as a thin wrapper that
+submits one request per batch row; ``generate_pertoken()`` keeps the old
+one-jit-call-per-token loop as the benchmark baseline.
 """
 
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import api
 from repro.models.blocks import ModelContext
 from repro.models.config import ModelConfig
+from repro.serve.kv_cache import DenseKVCache, PagedKVCache
+from repro.serve.scheduler import ContinuousBatchingScheduler, Request
 
 Array = jax.Array
+PyTree = Any
+
+PAD_TOKEN = -1  # emitted by finished slots inside a chunk
 
 
 @dataclasses.dataclass
 class ServeEngine:
+    """``window``: max total tokens per request (prompt + generated)."""
+
     cfg: ModelConfig
     ctx: ModelContext
     window: int
+    max_batch: int = 4
+    chunk: int = 8
+    page_size: int = 8
+    num_pages: Optional[int] = None
+    paged: Optional[bool] = None  # None -> auto by family
+    eos_id: Optional[int] = None
+    temperature: float = 0.0
 
     def __post_init__(self) -> None:
         cfg, ctx = self.cfg, self.ctx
+        if self.paged is None:
+            self.paged = api.supports_paged_decode(cfg)
+        if self.paged and not api.supports_paged_decode(cfg):
+            raise ValueError(f"{cfg.name}: paged serving unsupported")
+        self.counters = {"prefills": 0, "chunks": 0, "decode_steps": 0,
+                         "host_syncs": 0, "pertoken_steps": 0}
+        if self.paged:
+            # +1 page of table headroom: a finished slot's frozen pos can
+            # sit exactly at `window`, whose page index must still resolve
+            # (to the trash page) instead of clamping into a live page.
+            self.pages_per_seq = -(-self.window // self.page_size) + 1
+            self.prefill_len = self.pages_per_seq * self.page_size
+            if self.num_pages is None:
+                self.num_pages = 1 + self.max_batch * self.pages_per_seq
+            # prefill computes fp caches at absolute slots (no SWA ring);
+            # quantization happens on page write
+            self._prefill_ctx = ModelContext(
+                compute_dtype=ctx.compute_dtype, q_chunk=ctx.q_chunk,
+                shard=ctx.shard, mamba_chunk=ctx.mamba_chunk,
+                rwkv_chunk=ctx.rwkv_chunk, attn_impl=ctx.attn_impl,
+                full_cache_window=True)
+            self.kv: Any = PagedKVCache(
+                cfg, ctx, self.num_pages, self.page_size, self.max_batch,
+                self.pages_per_seq)
+        else:
+            self._prefill_ctx = ctx
+            self.kv = DenseKVCache(cfg, ctx, self.window, self.max_batch)
+        self._build_jitted()
+        self._reset_carry()
 
-        def prefill(params, batch):
-            return api.prefill_fn(params, batch, cfg, ctx, self.window)
+    # ------------------------------------------------------------ jit build
 
-        def decode(params, token, cache):
-            return api.decode_fn(params, token, cache, cfg, ctx)
+    @staticmethod
+    def _pick(logits: Array, key: Array, temp: Array) -> Array:
+        """logits (B,1,V) -> (B,1) int32 next tokens.
 
-        self._prefill = jax.jit(prefill)
-        self._decode = jax.jit(decode, donate_argnums=(2,))
+        ``temp`` is a traced scalar: greedy (temp <= 0) and sampled paths
+        share one compilation, so changing the temperature neither
+        recompiles nor requires rebuilding the engine."""
+        last = logits[:, -1, :].astype(jnp.float32)
+        greedy = jnp.argmax(last, axis=-1)
+        sampled = jax.random.categorical(
+            key, last / jnp.maximum(temp, 1e-6), axis=-1)
+        return jnp.where(temp > 0.0, sampled,
+                         greedy)[:, None].astype(jnp.int32)
+
+    @staticmethod
+    def _prefill_key(key: Array, rid: int) -> Array:
+        """Per-request sampling key for the first token. Double fold (a
+        dedicated stream id, then the rid) keeps it disjoint from the
+        single-fold per-step chunk keys and from other admissions in the
+        same boundary."""
+        return jax.random.fold_in(jax.random.fold_in(key, 0x9e3779), rid)
+
+    def _build_jitted(self) -> None:
+        cfg, ctx = self.cfg, self.ctx
+        eos = self.eos_id
+
+        # ---- prefill ----------------------------------------------------
+        def prefill_paged(params, tokens, n_valid, key, temp):
+            logits, cache = api.prefill_fn(
+                params, {"tokens": tokens}, cfg, self._prefill_ctx,
+                window=self.prefill_len, logits_at=n_valid[None] - 1)
+            first = self._pick(logits, key, temp)
+            return first, cache["blocks"]
+
+        def prefill_dense(params, batch, key, temp):
+            logits, cache = api.prefill_fn(params, batch, cfg, ctx,
+                                           window=self.window)
+            first = self._pick(logits, key, temp)
+            return first, cache
+
+        self._prefill_paged = jax.jit(prefill_paged)
+        self._prefill_dense = jax.jit(prefill_dense)
+
+        # ---- paged page write -------------------------------------------
+        from repro.models.blocks import paged_quantize
+
+        def write_pages(pages, blocks, row):
+            m, p = self.pages_per_seq, self.page_size
+            new = {}
+            for sl, sub in pages.items():
+                new[sl] = dict(sub)
+                for name in ("k", "v"):
+                    dense = blocks[sl][name]  # (L, 1, M*P, KV, D) fp
+                    lyr = dense.shape[0]
+                    dp = dense.reshape(lyr, m, p, *dense.shape[3:])
+                    q, scale = paged_quantize(dp, ctx.cache_dtype)
+                    new[sl][name] = sub[name].at[:, row].set(q)
+                    if scale is not None:
+                        new[sl][name + "_scale"] = \
+                            sub[name + "_scale"].at[:, row].set(scale)
+            return new
+
+        self._write_pages = jax.jit(write_pages, donate_argnums=(0,))
+
+        # ---- dense slot write -------------------------------------------
+        def write_dense(cache, row_cache, slot):
+            blocks = jax.tree.map(lambda c, r: c.at[:, slot].set(r[:, 0]),
+                                  cache["blocks"], row_cache["blocks"])
+            out = dict(cache)
+            out["blocks"] = blocks
+            return out
+
+        self._write_dense = jax.jit(write_dense, donate_argnums=(0,))
+
+        # ---- device-resident decode chunk -------------------------------
+        def chunk_body(params, table, temp, carry, i):
+            tok, pos, done, n_out, max_new, key, cache = carry
+            if self.paged:
+                state = {"pages": cache, "page_table": table, "pos": pos}
+                logits, new_state = api.decode_paged_fn(
+                    params, tok, state, cfg, ctx)
+                new_cache = new_state["pages"]
+            else:
+                state = dict(cache)
+                state["pos"] = pos
+                logits, new_state = api.decode_fn(
+                    params, tok, state, cfg, ctx)
+                new_cache = {k: v for k, v in new_state.items()
+                             if k != "pos"}
+            emitted = jnp.where(done, PAD_TOKEN, tok[:, 0])
+            n_out = n_out + jnp.where(done, 0, 1)
+            newly_done = ~done & (n_out >= max_new)
+            if eos is not None:
+                newly_done |= ~done & (tok[:, 0] == eos)
+            done = done | newly_done
+            # finished slots freeze: their (garbage) writes keep landing on
+            # the same slot/trash page and their position stops advancing
+            pos = jnp.where(done, pos, pos + 1)
+            nxt = self._pick(logits, jax.random.fold_in(key, i), temp)
+            tok = jnp.where(done[:, None], tok, nxt)
+            return (tok, pos, done, n_out, max_new, key, new_cache), emitted
+
+        def run_chunk(params, table, tok, pos, done, n_out, max_new, key,
+                      temp, t0, cache):
+            def step(carry, i):
+                return chunk_body(params, table, temp, carry, i)
+
+            carry0 = (tok, pos, done, n_out, max_new, key, cache)
+            carry, toks = jax.lax.scan(
+                step, carry0, t0 + jnp.arange(self.chunk))
+            tok, pos, done, n_out, max_new, _, cache = carry
+            return tok, pos, done, n_out, cache, toks.T  # toks (B, C)
+
+        self._run_chunk = jax.jit(run_chunk, donate_argnums=(10,))
+
+    # --------------------------------------------------------- carry state
+
+    def _reset_carry(self) -> None:
+        b = self.max_batch
+        self._tok = jnp.zeros((b, 1), jnp.int32)
+        self._pos = jnp.zeros((b,), jnp.int32)
+        self._done = jnp.ones((b,), bool)  # empty slots are "done"
+        self._n_out = jnp.zeros((b,), jnp.int32)
+        self._max_new = jnp.ones((b,), jnp.int32)
+        self._t = 0  # global decode-step clock (also the sampling stream)
+
+    def _admit_into_slot(self, params, req: Request, slot: int,
+                         key: Array, temp: Array) -> None:
+        rp = req.resume_prompt()
+        s = len(rp)
+        self.counters["prefills"] += 1
+        pkey = self._prefill_key(key, req.rid)
+        if self.paged:
+            padded = np.full((1, self.prefill_len), 0, np.int32)
+            padded[0, :s] = rp
+            first, blocks = self._prefill_paged(
+                params, jnp.asarray(padded), jnp.int32(s), pkey, temp)
+            self.kv.write_prefill(self._write_pages, slot, blocks)
+        else:
+            batch = {"tokens": jnp.asarray(rp[None, :])}
+            for k, v in req.extras.items():
+                batch[k] = jnp.asarray(v)
+            first, cache = self._prefill_dense(params, batch, pkey, temp)
+            self.kv.write_prefill(self._write_dense, slot, cache)
+        self._tok = self._tok.at[slot].set(first[0])
+        self._pos = self._pos.at[slot].set(s)
+        self._done = self._done.at[slot].set(False)
+        self._n_out = self._n_out.at[slot].set(len(req.generated))
+        self._max_new = self._max_new.at[slot].set(req.max_new)
+
+    # ---------------------------------------------------------------- run
+
+    def submit_check(self, req: Request) -> None:
+        total = len(req.prompt) + req.max_new
+        if total > self.window:
+            raise ValueError(
+                f"request {req.rid}: prompt+max_new={total} exceeds "
+                f"window={self.window}")
+
+    def run(self, params, requests: Sequence[Request], *,
+            key: Optional[Array] = None,
+            temperature: Optional[float] = None) -> Dict[int, np.ndarray]:
+        """Drain all requests; returns {rid: generated tokens}."""
+        sched = ContinuousBatchingScheduler(self.max_batch)
+        self.scheduler = sched
+        key = key if key is not None else jax.random.key(0)
+        temp = jnp.float32(self.temperature if temperature is None
+                           else temperature)
+        for req in requests:
+            self.submit_check(req)
+            sched.add(req)
+        self._reset_carry()
+        clock = 0
+        while sched.has_work():
+            # 1) page headroom for running slots; preempt youngest on
+            #    pressure (its pages free up for the older requests)
+            if self.paged:
+                # grow oldest-first so preemption (youngest-first) never
+                # starves the requests with the most progress
+                order = sorted(
+                    sched.running,
+                    key=lambda s: (sched.running[s].arrival,
+                                   sched.running[s].rid))
+                for slot in order:
+                    if slot not in sched.running:
+                        continue  # already preempted this boundary
+                    req = sched.running[slot]
+                    # tokens cached after the next chunk: prompt +
+                    # emitted so far + chunk new writes (+1 boundary)
+                    target = int(len(req.prompt) + len(req.generated)
+                                 + self.chunk + 1)
+                    while not self.kv.grow(slot, min(target, self.window)):
+                        victim = sched.preempt_victim()
+                        if victim is None:
+                            raise RuntimeError(
+                                "page pool too small for a single request")
+                        vslot = victim.slot
+                        sched.preempt(victim)
+                        self.kv.release(vslot)
+                        self._done = self._done.at[vslot].set(True)
+                        if vslot == slot:
+                            break  # we were the youngest: self-preempted
+            # 2) admissions into free slots (never preempt to admit)
+            while True:
+                req = sched.next_admittable(clock)
+                slots = sched.free_slots()
+                if req is None or not slots:
+                    break
+                slot = slots[0]
+                if self.paged:
+                    need = len(req.resume_prompt()) + self.chunk + 1
+                    if not self.kv.grow(slot, min(need, self.window)):
+                        break  # no pages: wait for completions
+                sched.admit(req, slot)
+                self._admit_into_slot(params, req, slot, key, temp)
+            if not sched.running:
+                if sched.next_admittable(clock) is not None:
+                    raise RuntimeError(
+                        "admission stalled with an empty batch: the page "
+                        "pool cannot hold one request (shrink window or "
+                        "grow num_pages)")
+                # idle: jump the trace clock to the next arrival
+                nxt = min(r.arrival for r in sched.waiting)
+                clock = max(clock + self.chunk, nxt)
+                continue
+            # 3) one device-resident chunk
+            sched.record_occupancy(len(sched.running))
+            cache = self.kv.pages if self.paged else \
+                {k: v for k, v in self.kv.cache.items() if k != "pos"}
+            table = self.kv.table_device() if self.paged else jnp.zeros(
+                (self.max_batch, 1), jnp.int32)
+            (self._tok, self._pos, self._done, self._n_out, new_cache,
+             toks) = self._run_chunk(
+                params, table, self._tok, self._pos, self._done,
+                self._n_out, self._max_new, key, temp,
+                jnp.int32(self._t), cache)
+            if self.paged:
+                self.kv.pages = new_cache
+            else:
+                new_cache = dict(new_cache)
+                new_cache["pos"] = self._pos
+                self.kv.update(new_cache)
+            self._t += self.chunk
+            clock += self.chunk
+            self.counters["chunks"] += 1
+            self.counters["decode_steps"] += self.chunk
+            # 4) drain: the single host sync per chunk
+            toks_h, done_h = jax.device_get((toks, self._done))
+            self.counters["host_syncs"] += 1
+            for slot in list(sched.running):
+                req = sched.running[slot]
+                for t in toks_h[slot]:
+                    if t != PAD_TOKEN:
+                        req.generated.append(int(t))
+                finished = bool(done_h[slot])
+                if finished:
+                    sched.complete(slot)
+                    if self.paged:
+                        self.kv.release(slot)
+        return {r.rid: np.asarray(r.generated, np.int32)
+                for r in sched.finished}
+
+    # ------------------------------------------------------- legacy API
 
     def generate(self, params, batch: Dict[str, Array], *, max_new: int,
                  temperature: float = 0.0,
                  key: Optional[Array] = None) -> Array:
-        """Greedy (or sampled) generation. Returns (B, max_new) tokens."""
-        logits, cache = self._prefill(params, batch)
+        """Single-batch generation (old API), served by the new engine.
+
+        Returns (B, max_new) tokens; rows that hit EOS early are padded
+        with the EOS id."""
+        tokens = np.asarray(batch["tokens"])
+        b = tokens.shape[0]
+        reqs = []
+        for i in range(b):
+            req = Request(rid=i, prompt=tokens[i], max_new=max_new)
+            req.extras = {k: np.asarray(v[i:i + 1])
+                          for k, v in batch.items() if k != "tokens"}
+            reqs.append(req)
+        out = self.run(params, reqs, key=key, temperature=temperature)
+        pad = self.eos_id if self.eos_id is not None else 0
+        rows = []
+        for i in range(b):
+            row = out[i]
+            if len(row) < max_new:
+                row = np.concatenate(
+                    [row, np.full(max_new - len(row), pad, np.int32)])
+            rows.append(row)
+        return jnp.asarray(np.stack(rows))
+
+    def generate_pertoken(self, params, batch: Dict[str, Array], *,
+                          max_new: int, temperature: float = 0.0,
+                          key: Optional[Array] = None) -> Array:
+        """The pre-rebuild per-token loop: one jit dispatch per token.
+
+        Kept as the benchmark baseline and as a cross-check oracle."""
+        if not hasattr(self, "_legacy_prefill"):
+            cfg, ctx = self.cfg, self.ctx
+
+            def prefill(params, batch):
+                return api.prefill_fn(params, batch, cfg, ctx, self.window)
+
+            def decode(params, token, cache):
+                return api.decode_fn(params, token, cache, cfg, ctx)
+
+            self._legacy_prefill = jax.jit(prefill)
+            self._legacy_decode = jax.jit(decode, donate_argnums=(2,))
+
+        def pick(logits, k):
+            last = logits[:, -1, :].astype(jnp.float32)
+            if temperature <= 0.0 or k is None:
+                return jnp.argmax(last, axis=-1)[:, None].astype(jnp.int32)
+            return jax.random.categorical(
+                k, last / temperature, axis=-1)[:, None].astype(jnp.int32)
+
+        logits, cache = self._legacy_prefill(params, batch)
         tokens = []
-        tok = self._pick(logits, temperature, key, 0)
+        tok = pick(logits, key)
         for i in range(max_new):
             tokens.append(tok)
-            logits, cache = self._decode(params, tok, cache)
+            logits, cache = self._legacy_decode(params, tok, cache)
             key_i = (jax.random.fold_in(key, i + 1)
                      if key is not None else None)
-            tok = self._pick(logits, temperature, key_i, i + 1)
+            tok = pick(logits, key_i)
+            self.counters["pertoken_steps"] += 1
         return jnp.concatenate(tokens, axis=1)
-
-    @staticmethod
-    def _pick(logits: Array, temperature: float, key: Optional[Array],
-              i: int) -> Array:
-        last = logits[:, -1, :].astype(jnp.float32)
-        if temperature <= 0.0 or key is None:
-            return jnp.argmax(last, axis=-1)[:, None].astype(jnp.int32)
-        return jax.random.categorical(
-            key, last / temperature, axis=-1)[:, None].astype(jnp.int32)
 
 
 def quantize_weights(params: Any, dtype=jnp.float8_e4m3fn) -> Any:

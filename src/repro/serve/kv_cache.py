@@ -1,0 +1,141 @@
+"""KV-cache backends for the serving engine.
+
+Two memory layouts behind one slot-oriented interface:
+
+``PagedKVCache``
+    A vLLM-style block/paged pool for pure-attention decoder-only stacks:
+    per layer, k/v live in a shared ``(num_pages, page_size, KV, D)``
+    pool; each request owns a list of page ids recorded in its row of the
+    device-resident page table. Page 0 is a reserved *trash page*: padded
+    table entries point at it, so scatter/gather with padded tables stays
+    branch-free on device. The pool dtype is a quantization hook —
+    ``int8`` stores per-(token, head) scales alongside the pages (the
+    Ironwood int8-KV memory lever; ~2x more resident requests per HBM).
+
+``DenseKVCache``
+    Per-slot ring/state caches (the classic layout) for every family —
+    attention rings, Mamba conv+ssm state, RWKV token/wkv state,
+    encoder-decoder cross-KV. Eviction is O(1): a slot's cache is simply
+    overwritten by the next admitted request's prefill.
+
+The host side owns allocation bookkeeping (free page list / free slots);
+the device side is pure pytrees threaded through the jitted decode chunk.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import api
+from repro.models.blocks import ModelContext
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+PyTree = Any
+
+
+def _zeros(spec: PyTree) -> PyTree:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+
+
+@dataclasses.dataclass
+class PagedKVCache:
+    """Host allocator + device page pool. Not jit-traced itself."""
+
+    cfg: ModelConfig
+    ctx: ModelContext
+    num_pages: int
+    page_size: int
+    max_batch: int
+    max_pages_per_seq: int
+
+    def __post_init__(self) -> None:
+        spec = api.paged_state_spec(
+            self.cfg, self.num_pages, self.page_size, self.max_batch,
+            self.max_pages_per_seq, self.ctx)
+        state = _zeros(spec)
+        self.pages: PyTree = state["pages"]
+        # page 0 is the trash page: never allocated
+        self._free: List[int] = list(range(self.num_pages - 1, 0, -1))
+        # host mirror of the table; pushed to device on change
+        self._table = np.zeros((self.max_batch, self.max_pages_per_seq),
+                               np.int32)
+
+    # ---------------------------------------------------------- allocation
+
+    def free_page_count(self) -> int:
+        return len(self._free)
+
+    def pages_for(self, tokens: int) -> int:
+        return -(-tokens // self.page_size)
+
+    def slot_pages(self, slot: int) -> List[int]:
+        return [int(p) for p in self._table[slot] if p != 0]
+
+    def grow(self, slot: int, target_tokens: int) -> bool:
+        """Ensure the slot owns pages covering ``target_tokens``; returns
+        False (no change) when the pool cannot satisfy the request."""
+        have = len(self.slot_pages(slot))
+        need = self.pages_for(target_tokens) - have
+        if need <= 0:
+            return True
+        if need > len(self._free) or have + need > self.max_pages_per_seq:
+            return False
+        for i in range(need):
+            self._table[slot, have + i] = self._free.pop()
+        return True
+
+    def release(self, slot: int) -> None:
+        self._free.extend(self.slot_pages(slot)[::-1])
+        self._table[slot] = 0
+
+    def table_device(self) -> Array:
+        return jnp.asarray(self._table)
+
+    # ------------------------------------------------------------- device
+
+    def state(self, pos: Array) -> Dict[str, Any]:
+        return {"pages": self.pages, "page_table": self.table_device(),
+                "pos": pos}
+
+    def write_prefill(self, write_fn, slot: int,
+                      prefill_cache: PyTree) -> None:
+        """Scatter a single-request dense prefill cache into this slot's
+        pages via the jitted ``write_fn`` (built by the engine). Table
+        entries beyond the slot's allocation are 0, so the padded tail of
+        the prefill lands in the trash page."""
+        row = jnp.asarray(self._table[slot])
+        self.pages = write_fn(self.pages, prefill_cache, row)
+
+
+@dataclasses.dataclass
+class DenseKVCache:
+    """Per-slot dense ring/state caches for any model family."""
+
+    cfg: ModelConfig
+    ctx: ModelContext
+    window: int
+    max_batch: int
+
+    def __post_init__(self) -> None:
+        spec = api.cache_spec(self.cfg, self.max_batch, self.window,
+                              self.ctx)
+        self.cache: PyTree = _zeros(spec)
+
+    def state(self, pos: Array) -> Dict[str, Any]:
+        cache = dict(self.cache)
+        cache["pos"] = pos
+        return cache
+
+    def update(self, cache: PyTree) -> None:
+        self.cache = {k: v for k, v in cache.items() if k != "pos"}
+
+    def write_prefill(self, write_fn, slot: int,
+                      prefill_cache: PyTree) -> None:
+        """Copy a 1-request prefill cache into batch row ``slot``."""
+        self.cache = write_fn(self.cache, prefill_cache, jnp.int32(slot))

@@ -1,0 +1,121 @@
+"""Request-level continuous-batching scheduler.
+
+The serving engine decodes in fixed device-resident chunks; between
+chunks this scheduler owns every request-level decision:
+
+  * **admission** — arrived requests claim free batch slots (and pages,
+    in paged mode) in arrival order;
+  * **completion** — finished slots (EOS or token budget) are drained and
+    freed mid-stream, so the batch refills without draining;
+  * **preemption** — under page pressure the youngest running request is
+    evicted: its pages are freed and it re-queues with its generated
+    prefix folded into the prompt (recompute-style preemption; with
+    greedy sampling the resumed request reproduces the same tokens, which
+    is what the parity test pins).
+
+The scheduler is pure host-side bookkeeping — everything it decides is
+reflected to the device as page-table/pos updates before the next chunk.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request. ``arrival`` is in engine-step units (the
+    benchmark's synthetic trace clock); 0 = available immediately."""
+
+    rid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new: int
+    arrival: int = 0
+
+    def __post_init__(self) -> None:
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if self.max_new < 1:
+            raise ValueError("max_new must be >= 1")
+        self.generated: List[int] = []
+        self.state = "waiting"  # waiting | running | finished
+        self.slot: int = -1
+        self.preemptions = 0
+        self.extras: Dict[str, np.ndarray] = {}  # e.g. enc_feats (1, S, D)
+
+    @property
+    def remaining(self) -> int:
+        return self.max_new - len(self.generated)
+
+    def resume_prompt(self) -> np.ndarray:
+        """Prompt for (re-)prefill: original + everything generated."""
+        return np.concatenate(
+            [self.prompt, np.asarray(self.generated, np.int32)])
+
+
+class ContinuousBatchingScheduler:
+    def __init__(self, max_slots: int):
+        self.max_slots = max_slots
+        self.waiting: List[Request] = []
+        self.running: Dict[int, Request] = {}  # slot -> request
+        self.finished: List[Request] = []
+        self.stats = {"admissions": 0, "preemptions": 0, "completions": 0}
+        self._occupancy: List[float] = []
+
+    # ------------------------------------------------------------- queues
+
+    def add(self, req: Request) -> None:
+        self.waiting.append(req)
+        self.waiting.sort(key=lambda r: (r.arrival, r.rid))
+
+    def has_work(self) -> bool:
+        return bool(self.waiting) or bool(self.running)
+
+    def free_slots(self) -> List[int]:
+        return [s for s in range(self.max_slots) if s not in self.running]
+
+    def next_admittable(self, clock: int) -> Optional[Request]:
+        for req in self.waiting:
+            if req.arrival <= clock:
+                return req
+        return None
+
+    def admit(self, req: Request, slot: int) -> None:
+        self.waiting.remove(req)
+        req.state, req.slot = "running", slot
+        self.running[slot] = req
+        self.stats["admissions"] += 1
+
+    def complete(self, slot: int) -> Request:
+        req = self.running.pop(slot)
+        req.state, req.slot = "finished", -1
+        self.finished.append(req)
+        self.stats["completions"] += 1
+        return req
+
+    def preempt_victim(self) -> Optional[Request]:
+        """Youngest running request (latest arrival, then highest rid) —
+        the classic recompute-preemption policy: the oldest requests keep
+        their progress."""
+        if not self.running:
+            return None
+        return max(self.running.values(), key=lambda r: (r.arrival, r.rid))
+
+    def preempt(self, req: Request) -> None:
+        assert req.state == "running"
+        del self.running[req.slot]
+        req.state, req.slot = "waiting", -1
+        req.preemptions += 1
+        self.stats["preemptions"] += 1
+        self.add(req)
+
+    # -------------------------------------------------------------- stats
+
+    def record_occupancy(self, live: int) -> None:
+        self._occupancy.append(live / max(self.max_slots, 1))
+
+    @property
+    def mean_occupancy(self) -> float:
+        return float(np.mean(self._occupancy)) if self._occupancy else 0.0

@@ -84,13 +84,19 @@ def make_compressed_grad_fn(
         metrics = jax.tree.map(lambda m: jax.lax.pmean(m, "pod"), metrics)
         return (loss, metrics), g_mean, new_err
 
-    return jax.shard_map(
-        local, mesh=mesh,
-        in_specs=(P(), batch_specs, P()),
-        out_specs=((P(), P()), P(), P()),
-        check_vma=False,
-        axis_names={"pod"},
-    )
+    in_specs = (P(), batch_specs, P())
+    out_specs = ((P(), P()), P(), P())
+    if hasattr(jax, "shard_map"):  # jax >= 0.5
+        return jax.shard_map(local, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False,
+                             axis_names={"pod"})
+    # jax 0.4.x: partial-auto (auto={data,model}) trips an SPMD-partitioner
+    # check on the scalar-scale all_gather in this XLA build; run the whole
+    # exchange fully manual there instead (data/model stay unsharded inside).
+    del auto
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(local, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=False)
 
 
 def wire_bytes_per_step(n_params: int, pods: int,

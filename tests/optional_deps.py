@@ -1,0 +1,86 @@
+"""Optional-dependency shim for ``hypothesis``.
+
+Tier-1 must collect and run everywhere, including containers where
+``hypothesis`` cannot be installed. When the real package is present we
+re-export it untouched; otherwise we provide a deterministic mini
+property-based fallback with the same decorator surface used by this
+test suite (``given``/``settings`` and the ``integers``/``floats``/
+``lists``/``sampled_from`` strategies). The fallback draws a fixed
+number of seeded examples per test — weaker than real hypothesis (no
+shrinking, no database) but it keeps every property exercised.
+"""
+
+from __future__ import annotations
+
+import functools
+import types
+import zlib
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised in hypothesis-less envs
+    HAVE_HYPOTHESIS = False
+
+    import numpy as _np
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng, boundary: bool):
+            return self._draw(rng, boundary)
+
+    def _integers(min_value=0, max_value=1 << 30):
+        return _Strategy(lambda rng, b: min_value if b else int(
+            rng.integers(min_value, max_value + 1)))
+
+    def _floats(min_value=0.0, max_value=1.0, **_kw):
+        return _Strategy(lambda rng, b: float(min_value) if b else float(
+            rng.uniform(min_value, max_value)))
+
+    def _sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng, b: elements[0] if b else elements[
+            int(rng.integers(len(elements)))])
+
+    def _lists(elems, min_size=0, max_size=10):
+        def draw(rng, b):
+            n = min_size if b else int(rng.integers(min_size, max_size + 1))
+            return [elems.draw(rng, False) for _ in range(n)]
+        return _Strategy(draw)
+
+    def _settings(max_examples=20, deadline=None, **_kw):
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+        return deco
+
+    def _given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            n = getattr(fn, "_shim_max_examples", 20)
+
+            @functools.wraps(fn)
+            def wrapper():
+                for i in range(n):
+                    seed = zlib.crc32(f"{fn.__module__}.{fn.__name__}:{i}"
+                                      .encode())
+                    rng = _np.random.default_rng(seed)
+                    boundary = i == 0  # probe min/first values once
+                    args = [s.draw(rng, boundary) for s in arg_strategies]
+                    kwargs = {k: s.draw(rng, boundary)
+                              for k, s in kw_strategies.items()}
+                    fn(*args, **kwargs)
+
+            # drop functools' __wrapped__ so pytest sees a zero-arg
+            # signature and does not treat drawn params as fixtures
+            del wrapper.__wrapped__
+            return wrapper
+        return deco
+
+    hypothesis = types.SimpleNamespace(given=_given, settings=_settings)
+    st = types.SimpleNamespace(integers=_integers, floats=_floats,
+                               lists=_lists, sampled_from=_sampled_from)
+
+__all__ = ["hypothesis", "st", "HAVE_HYPOTHESIS"]

@@ -1,8 +1,7 @@
 """Core paper-contribution modules: Table-1 claims, topology, OCS scheduler
 invariants (hypothesis), goodput, CCI relations, SDC detection."""
 
-import hypothesis
-import hypothesis.strategies as st
+from optional_deps import hypothesis, st  # real or deterministic shim
 import numpy as np
 import pytest
 

@@ -1,8 +1,7 @@
 """Per-kernel validation: interpret-mode Pallas vs pure-jnp oracles,
 swept over shapes and dtypes, plus hypothesis property tests."""
 
-import hypothesis
-import hypothesis.strategies as st
+from optional_deps import hypothesis, st  # real or deterministic shim
 import jax
 import jax.numpy as jnp
 import numpy as np

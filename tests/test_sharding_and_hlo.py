@@ -1,8 +1,7 @@
 """Sharding rule resolution (hypothesis properties) + HLO analyzer units +
 multi-device subprocess integration (mini dry-run, compressed grads)."""
 
-import hypothesis
-import hypothesis.strategies as st
+from optional_deps import hypothesis, st  # real or deterministic shim
 import numpy as np
 import pytest
 
@@ -54,8 +53,8 @@ def test_trip_count_scaling(subproc):
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.core.hlo_analysis import analyze_compiled_text
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((4, 2), ("data", "model"))
 S = lambda *s: NamedSharding(mesh, P(*s))
 def make(L):
     def step(ws, x):
@@ -176,8 +175,8 @@ def test_compressed_pod_grads(subproc):
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.train.compress import make_compressed_grad_fn, init_error_state
-mesh = jax.make_mesh((2,2,2), ("pod","data","model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*3)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2,2,2), ("pod","data","model"))
 def loss_fn(params, batch):
     y = batch["x"] @ params["w"]
     l = jnp.mean((y - batch["t"])**2)

@@ -1,6 +1,7 @@
 # Convenience entry points. `make test` is the tier-1 gate from ROADMAP.md.
 
-.PHONY: test test-serve bench-serve serve-demo
+.PHONY: test test-serve test-fleet bench-serve bench-fleet serve-demo \
+	fleet-demo
 
 test:
 	./scripts/tier1.sh
@@ -8,8 +9,17 @@ test:
 test-serve:
 	./scripts/tier1.sh tests/test_serve.py
 
+test-fleet:
+	./scripts/tier1.sh tests/test_fleet.py
+
 bench-serve:
 	PYTHONPATH=src python benchmarks/bench_serve.py
 
+bench-fleet:
+	PYTHONPATH=src python -m benchmarks.run --only fleet
+
 serve-demo:
 	PYTHONPATH=src python examples/serve_decode.py
+
+fleet-demo:
+	PYTHONPATH=src python examples/fleet_week.py

@@ -35,5 +35,9 @@ def run(emit) -> None:
         emit("goodput/measured_2_failures_28_steps", s["goodput"],
              f"rework={s['rework_s']:.2f}s restore={s['restore_s']:.2f}s")
         emit("goodput/effective_steps", s["effective_steps"], "expect 28")
+        rs = trainer.replay_summary()
+        emit("goodput/replayed_steps", rs["replayed_steps"],
+             f"of {rs['executions']} executions "
+             f"(ckpt@8: failures 13,21 -> 5+5 replays)")
     finally:
         shutil.rmtree(tmp, ignore_errors=True)

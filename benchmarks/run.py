@@ -10,9 +10,9 @@ import argparse
 import sys
 import time
 
-from benchmarks import (bench_cci, bench_goodput, bench_kernels, bench_ocs,
-                        bench_perf_watt, bench_roofline, bench_sdc,
-                        bench_table1)
+from benchmarks import (bench_cci, bench_fleet, bench_goodput,
+                        bench_kernels, bench_ocs, bench_perf_watt,
+                        bench_roofline, bench_sdc, bench_table1)
 
 SUITES = {
     "table1": bench_table1,
@@ -20,6 +20,7 @@ SUITES = {
     "fig6_cci": bench_cci,
     "ocs": bench_ocs,
     "goodput": bench_goodput,
+    "fleet": bench_fleet,
     "sdc": bench_sdc,
     "kernels": bench_kernels,
     "roofline": bench_roofline,

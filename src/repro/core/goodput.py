@@ -17,7 +17,7 @@ or by the resilience simulator (modeled intervals) — both report
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import Dict, List, Tuple
 
 
 @dataclasses.dataclass
@@ -79,6 +79,22 @@ class GoodputLedger:
     @property
     def effective_steps(self) -> int:
         return sum(e.steps for e in self.events if e.kind == "steps")
+
+    def structure(self) -> List[Tuple[str, int]]:
+        """The ledger as a (kind, steps) sequence with consecutive
+        same-kind events merged.
+
+        Durations are dropped: a *measured* ledger (ResilientTrainer) and
+        a *modeled* one (fleet simulator) driven by the same failure plan
+        must agree on this sequence event-for-event even though their
+        seconds differ — the fleet bridge pins exactly that."""
+        out: List[Tuple[str, int]] = []
+        for e in self.events:
+            if out and out[-1][0] == e.kind:
+                out[-1] = (e.kind, out[-1][1] + e.steps)
+            else:
+                out.append((e.kind, e.steps))
+        return out
 
     def summary(self) -> Dict[str, float]:
         t = self.totals()

@@ -200,6 +200,28 @@ TPU_V5E = TPUSpec(
     rel_pod_tdp=float("nan"),
 )
 
+# Absolute TDP anchor for the paper's *relative* TDP row. The paper
+# normalizes Pod TDP to TPU v2 = 1 and never states watts; the public TPU v2
+# chip TDP (280 W) anchors the scale so the fleet simulator can integrate
+# joules. Every other generation's absolute TDP is derived from its
+# rel_pod_tdp, keeping the paper's ratios exact by construction.
+TPU_V2_CHIP_TDP_W = 280.0
+TPU_V2_POD_TDP_W = TPU_V2_CHIP_TDP_W * 256  # 71.68 kW
+
+
+def pod_tdp_watts(spec: TPUSpec) -> Optional[float]:
+    """Absolute pod TDP in watts (None when the paper gives no relative
+    TDP for this part, e.g. TPU v5e)."""
+    if math.isnan(spec.rel_pod_tdp):
+        return None
+    return spec.rel_pod_tdp * TPU_V2_POD_TDP_W
+
+
+def chip_tdp_watts(spec: TPUSpec) -> Optional[float]:
+    pod = pod_tdp_watts(spec)
+    return None if pod is None else pod / spec.pod_size
+
+
 GENERATIONS: Tuple[TPUSpec, ...] = (TPU_V2, TPU_V3, TPU_V4, TPU_V5P, IRONWOOD)
 
 BY_NAME: Dict[str, TPUSpec] = {s.name: s for s in GENERATIONS + (TPU_V5E,)}

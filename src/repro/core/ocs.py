@@ -74,6 +74,7 @@ class OCSPodScheduler:
         self._installed: Set[CubeId] = set(range(total_cubes))
         self._alloc: Dict[str, SliceAllocation] = {}
         self._cube_owner: Dict[CubeId, str] = {}
+        self.reconfig_count = 0  # successful OCS substitutions
 
     # ------------------------------------------------------------------ api
 
@@ -140,6 +141,20 @@ class OCSPodScheduler:
     def repair_cube(self, cube_id: CubeId) -> None:
         self._failed.discard(cube_id)
 
+    def fail_host(self, host_id: int, tpus_per_host: int = 4
+                  ) -> Tuple[CubeId, Optional[str]]:
+        """A CPU host dies (the paper's primary availability hazard).
+
+        A host serves ``tpus_per_host`` chips, so a 64-chip cube spans
+        several hosts; losing any host breaks the cube's torus, and the
+        map-out granularity of the OCS is the whole cube. Returns
+        (cube id, impacted job)."""
+        hosts_per_cube = self.cube.chips // tpus_per_host
+        cube_id = host_id // hosts_per_cube
+        if not 0 <= cube_id < self.total_cubes:
+            raise ValueError(f"host {host_id} outside pod")
+        return cube_id, self.fail_cube(cube_id)
+
     def substitute(self, job: str) -> Optional[SliceAllocation]:
         """Map out failed cubes of a job, substituting idle spares (OCS
         reconfiguration). Returns the patched allocation, or None if not
@@ -165,7 +180,28 @@ class OCSPodScheduler:
             self._cube_owner[c] = job
         patched = dataclasses.replace(alloc, cubes=new_cubes)
         self._alloc[job] = patched
+        self.reconfig_count += 1
         return patched
+
+    # -- invariants (property tests / fleet simulator) -----------------------
+
+    def check_invariants(self) -> None:
+        """Raise AssertionError if the allocation state is inconsistent.
+
+        Pinned invariants: no two live slices share a cube; the ownership
+        index agrees with the allocations; allocations only use installed
+        cubes; every owned cube belongs to a live allocation."""
+        seen: Dict[CubeId, str] = {}
+        for job, alloc in self._alloc.items():
+            for c in alloc.cubes:
+                assert c not in seen, \
+                    f"cube {c} shared by {seen[c]!r} and {job!r}"
+                seen[c] = job
+                assert c in self._installed, f"cube {c} not installed"
+                assert self._cube_owner.get(c) == job, \
+                    f"owner index disagrees for cube {c}"
+        assert set(self._cube_owner) == set(seen), \
+            "ownership index has stale entries"
 
     # -- contiguous-mode block search -----------------------------------------
 

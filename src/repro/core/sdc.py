@@ -184,6 +184,52 @@ class ReplayChecker:
 
 
 # ---------------------------------------------------------------------------
+# Fleet-level SDC rate model (consumed by the fleet simulator).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SDCRateModel:
+    """Occurrence + detection statistics for silent data corruption.
+
+    Corruptions arrive as a Poisson process at ``rate_per_chip_hour`` per
+    chip. Detection is by the sampled screens above (FBIST patterns /
+    replay checks) run every ``screen_interval_s``; each screen catches an
+    active corruption with probability ``screen_coverage``, so the
+    detection delay is geometric over screen intervals. The killer
+    property the simulator reproduces: unlike fail-stop failures, the
+    rework after an SDC reaches back to the last checkpoint *before the
+    corruption occurred* — every checkpoint written while the corruption
+    went undetected is poisoned.
+    """
+
+    rate_per_chip_hour: float = 1e-7
+    screen_interval_s: float = 300.0
+    screen_coverage: float = 0.9
+
+    def __post_init__(self) -> None:
+        if not 0.0 < self.screen_coverage <= 1.0:
+            raise ValueError("screen_coverage in (0, 1]")
+
+    def corruption_rate_per_s(self, chips: int) -> float:
+        return self.rate_per_chip_hour * chips / 3600.0
+
+    def draw_time_to_corruption_s(self, rng: np.random.Generator,
+                                  chips: int) -> float:
+        rate = self.corruption_rate_per_s(chips)
+        if rate <= 0.0:
+            return float("inf")
+        return float(rng.exponential(1.0 / rate))
+
+    def draw_detection_delay_s(self, rng: np.random.Generator) -> float:
+        """Time from corruption to a screen catching it (geometric over
+        screens; the first opportunity is the next screen boundary)."""
+        missed = int(rng.geometric(self.screen_coverage)) - 1
+        offset = float(rng.uniform(0.0, self.screen_interval_s))
+        return offset + missed * self.screen_interval_s
+
+
+# ---------------------------------------------------------------------------
 # Fleet screening loop (FBIST across devices; OCS map-out hook).
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,28 @@
+"""Fleet simulator: discrete-event multi-job pod simulation.
+
+Composes the repo's per-component paper models — OCS cube scheduling
+(`core.ocs`), goodput accounting (`core.goodput`), SDC detection
+statistics (`core.sdc`), and per-generation TDP/perf (`core.hwspec`) —
+into one executable fleet story: many concurrent training jobs on a
+simulated pod, over days of simulated time, with failures, repairs, OCS
+reconfigurations, silent-data-corruption rollbacks, and power/carbon
+integration per job.
+"""
+
+from repro.fleet.bridge import run_bridge, simulate_trainer_plan
+from repro.fleet.events import Event, EventEngine
+from repro.fleet.jobs import (JobRuntime, JobSpec,
+                              optimal_checkpoint_interval_s,
+                              search_checkpoint_interval)
+from repro.fleet.power import PowerModel, generation_efficiency_table, \
+    sustainability_ratios
+from repro.fleet.sim import FleetConfig, FleetSimulator
+from repro.fleet.trace import TraceRecorder
+
+__all__ = [
+    "run_bridge", "simulate_trainer_plan",
+    "Event", "EventEngine", "JobRuntime", "JobSpec",
+    "optimal_checkpoint_interval_s", "search_checkpoint_interval",
+    "PowerModel", "generation_efficiency_table", "sustainability_ratios",
+    "FleetConfig", "FleetSimulator", "TraceRecorder",
+]

@@ -1,0 +1,102 @@
+"""Validate the fleet simulator against the real resilient trainer.
+
+``run_bridge`` executes the same failure plan twice:
+
+  * for real — a smoke-scale ``ResilientTrainer`` run (actual model,
+    actual checkpoints, actual OCS substitutions, measured seconds);
+  * in the simulator — one fleet job with the identical plan
+    (checkpoint cadence, failure steps, cube ids) and modeled seconds.
+
+The two goodput ledgers must agree *event-for-event in structure*
+(``GoodputLedger.structure()``: the merged (kind, steps) sequence —
+bootstrap idle, step runs, checkpoint marks, detect/restore/rework
+triplets with identical rework step counts). Durations differ by
+construction (measured vs modeled); the grammar must not.
+"""
+
+from __future__ import annotations
+
+import shutil
+import tempfile
+from typing import Dict, Optional
+
+from repro.core.goodput import GoodputLedger
+from repro.fleet.jobs import JobSpec
+from repro.fleet.sim import FleetConfig, FleetSimulator
+
+# Mirrors launch.train.build_trainer's pod: Ironwood-scale cube count,
+# one 8192-chip job (cubes 0..127), 16 spares.
+_TOTAL_CUBES = 144
+_JOB_CHIPS = 128 * 64
+
+
+def simulate_trainer_plan(
+    *,
+    total_steps: int,
+    checkpoint_every: int,
+    failures: Dict[int, int],
+    step_time_s: float = 1.0,
+    detect_s: float = 0.05,
+    restore_s: float = 0.05,
+    tpu: str = "ironwood",
+) -> GoodputLedger:
+    """Run the fleet simulator over the exact failure plan a
+    ResilientTrainer would be given, returning the simulated ledger."""
+    spec = JobSpec(
+        name="train", chips=_JOB_CHIPS, total_steps=total_steps,
+        step_time_s=step_time_s,
+        checkpoint_every_steps=checkpoint_every,
+        failure_steps=tuple(sorted(failures.items())))
+    cfg = FleetConfig(tpu=tpu, total_cubes=_TOTAL_CUBES,
+                      host_mtbf_hours=None, detect_s=detect_s,
+                      restore_s=restore_s, reconfig_s=0.0, sdc=None)
+    sim = FleetSimulator(cfg, [spec])
+    # horizon: each failure costs detect + restore + rework, and rework
+    # is bounded by the full history (checkpoint_every > total_steps)
+    sim.run((1 + len(failures)) * total_steps * step_time_s
+            + len(failures) * (detect_s + restore_s) + 1.0)
+    job = sim.jobs["train"]
+    assert job.state == "done", f"sim job did not finish: {job.state}"
+    return job.ledger
+
+
+def run_bridge(
+    *,
+    arch: str = "qwen2_0_5b",
+    steps: int = 18,
+    checkpoint_every: int = 6,
+    failures: Optional[Dict[int, int]] = None,
+    batch: int = 2,
+    seq: int = 16,
+) -> Dict[str, object]:
+    """Real run vs simulated run of one failure plan; returns both
+    structures, both goodputs, and whether the structures match."""
+    from repro.configs.registry import get_smoke
+    from repro.launch.train import build_trainer
+    from repro.resilience.driver import StragglerPolicy
+
+    failures = dict(failures if failures is not None else {9: 0, 14: 1})
+    tmp = tempfile.mkdtemp(prefix="fleet_bridge_")
+    try:
+        trainer, state = build_trainer(
+            get_smoke(arch), batch=batch, seq=seq, ckpt_dir=tmp,
+            checkpoint_every=checkpoint_every, failures=dict(failures))
+        # CPU timing jitter must not inject straggler idle events into
+        # the measured structure
+        trainer.straggler = StragglerPolicy(threshold=float("inf"))
+        _, real_ledger, losses = trainer.run(state, steps)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    sim_ledger = simulate_trainer_plan(
+        total_steps=steps, checkpoint_every=checkpoint_every,
+        failures=failures)
+    real_s, sim_s = real_ledger.structure(), sim_ledger.structure()
+    return {
+        "real_structure": real_s,
+        "sim_structure": sim_s,
+        "match": real_s == sim_s,
+        "real_goodput": real_ledger.goodput,
+        "sim_goodput": sim_ledger.goodput,
+        "effective_steps": len(losses),
+        "replay_summary": trainer.replay_summary(),
+    }

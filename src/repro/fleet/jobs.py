@@ -1,0 +1,134 @@
+"""Job model for the fleet simulator.
+
+A job is a synchronous training run on a slice of cubes: progress is
+step-quantized (``step_time_s`` per step), checkpoints land at absolute
+step multiples of ``checkpoint_every_steps`` (asynchronous writes — they
+cost rework exposure, not step time, matching the repo's
+``CheckpointManager``), and every interruption charges the job's
+``GoodputLedger`` with the same event grammar the real
+``ResilientTrainer`` produces: ``detect -> restore -> rework`` after a
+failure, ``idle`` markers for checkpoint snapshots and queue waits. The
+fleet bridge (fleet/bridge.py) pins that grammar against a real run.
+
+Also here: the checkpoint-interval policy math — the Young/Daly
+closed form and a direct search over ``core.goodput.modeled_goodput``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+from repro.core.goodput import GoodputLedger, modeled_goodput
+from repro.core.ocs import SliceAllocation
+
+
+@dataclasses.dataclass(frozen=True)
+class JobSpec:
+    """One training job submitted to the fleet.
+
+    ``failure_steps`` is the deterministic failure plan (step -> cube id,
+    the same shape ``resilience.driver.FailurePlan`` takes; cube -1 means
+    "any cube the job owns") used by the sim-vs-trainer bridge and by
+    reproducible scenarios. Stochastic failures come from the fleet
+    config instead.
+    """
+
+    name: str
+    chips: int
+    total_steps: int
+    step_time_s: float = 1.0
+    checkpoint_every_steps: int = 100
+    arrival_s: float = 0.0
+    failure_steps: Tuple[Tuple[int, int], ...] = ()
+
+    def __post_init__(self) -> None:
+        if self.total_steps <= 0:
+            raise ValueError("total_steps must be positive")
+        if self.checkpoint_every_steps <= 0:
+            raise ValueError("checkpoint_every_steps must be positive")
+        if self.step_time_s <= 0:
+            raise ValueError("step_time_s must be positive")
+
+    def plan(self) -> Dict[int, int]:
+        return dict(self.failure_steps)
+
+
+@dataclasses.dataclass
+class JobRuntime:
+    """Simulator-side mutable state of one job."""
+
+    spec: JobSpec
+    ledger: GoodputLedger = dataclasses.field(default_factory=GoodputLedger)
+    state: str = "pending"  # pending|queued|running|starved|done
+    alloc: Optional[SliceAllocation] = None
+    base_step: int = 0  # progress at segment start
+    last_ckpt_step: int = 0
+    segment_start: float = 0.0  # sim time productive stepping (re)starts
+    epoch: int = 0  # bumps whenever the timeline is rescheduled
+    queued_since: float = 0.0
+    pending_resume_step: Optional[int] = None  # progress before starvation
+    sdc_corrupt_step: Optional[int] = None
+    completed_at: Optional[float] = None
+    plan: Dict[int, int] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        self.plan = self.spec.plan()
+
+    def steps_at(self, t: float) -> int:
+        """Step count reached by sim time ``t`` in the current segment
+        (clamped: restore/rework windows put segment_start in the
+        future)."""
+        if self.state != "running":
+            return self.base_step
+        done = int(max(0.0, t - self.segment_start) // self.spec.step_time_s)
+        return min(self.spec.total_steps, self.base_step + done)
+
+    def next_planned_failure(self) -> Optional[Tuple[int, int]]:
+        """(step, cube) of the earliest planned failure not yet fired."""
+        if not self.plan:
+            return None
+        step = min(self.plan)
+        return step, self.plan[step]
+
+    @property
+    def goodput(self) -> float:
+        return self.ledger.goodput
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint-interval policy.
+# ---------------------------------------------------------------------------
+
+
+def optimal_checkpoint_interval_s(mtbf_s: float,
+                                  checkpoint_write_s: float) -> float:
+    """Young/Daly first-order optimum: T* = sqrt(2 * delta * MTBF)."""
+    if mtbf_s <= 0 or checkpoint_write_s <= 0:
+        raise ValueError("mtbf and checkpoint write cost must be positive")
+    return math.sqrt(2.0 * checkpoint_write_s * mtbf_s)
+
+
+def search_checkpoint_interval(
+    *,
+    mtbf_hours: float,
+    detect_s: float,
+    restore_s: float,
+    checkpoint_write_s: float,
+    lo_s: float = 10.0,
+    hi_s: float = 24 * 3600.0,
+    points: int = 400,
+) -> Tuple[float, float]:
+    """Grid-search the interval maximizing ``modeled_goodput`` (log-spaced
+    grid). Returns (best_interval_s, best_goodput). Agrees with Young/Daly
+    to first order when detect/restore costs are small vs MTBF."""
+    best_t, best_g = lo_s, -1.0
+    for i in range(points):
+        t = lo_s * (hi_s / lo_s) ** (i / (points - 1))
+        g = modeled_goodput(mtbf_hours=mtbf_hours, detect_s=detect_s,
+                            restore_s=restore_s, checkpoint_interval_s=t,
+                            checkpoint_write_s=checkpoint_write_s)
+        if g > best_g:
+            best_t, best_g = t, g
+    return best_t, best_g

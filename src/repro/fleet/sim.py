@@ -1,0 +1,460 @@
+"""Discrete-event fleet simulator: many jobs, one pod, days of sim time.
+
+The executable composition of the paper's resilience story:
+
+  host/cube failures (Poisson per cube, scaled from per-host MTBF)
+    -> detect -> OCS spare substitution via the *real* ``OCSPodScheduler``
+    -> restore from the last checkpoint -> rework the lost steps
+    -> per-job ``GoodputLedger`` charges, same event grammar as the real
+       ``ResilientTrainer`` (fleet/bridge.py pins the agreement);
+
+  silent data corruption (``core.sdc.SDCRateModel``)
+    -> detected by a later sampled screen -> roll back to the last
+       checkpoint *before the corruption* (later snapshots are poisoned)
+    -> map out the offending cube;
+
+  no spares -> the job is starved: it releases its slice, queues, and is
+  re-admitted (restore + rework) when a repair or completion frees cubes.
+
+Progress is step-quantized but simulated analytically — between events a
+job's step count is a closed-form function of time, so a week of
+simulated pod time costs thousands of events, not billions of steps.
+``contiguous=True`` runs the same fleet against pre-OCS (TPU v2/v3)
+scheduling semantics: no substitution, rectangular-block allocation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+from repro.core import hwspec
+from repro.core.ocs import OCSPodScheduler
+from repro.core.sdc import SDCRateModel
+from repro.core.topology import CUBE
+from repro.fleet.events import Event, EventEngine
+from repro.fleet.jobs import JobRuntime, JobSpec
+from repro.fleet.trace import TraceRecorder
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    tpu: str = "tpu_v4"
+    total_cubes: int = 64
+    host_mtbf_hours: Optional[float] = None  # None: planned failures only
+    repair_hours: float = 4.0
+    detect_s: float = 30.0
+    restore_s: float = 120.0
+    reconfig_s: float = 10.0  # OCS substitution latency, folded into restore
+    sdc: Optional[SDCRateModel] = None
+    contiguous: bool = False  # pre-OCS (TPU v2/v3) scheduling semantics
+    seed: int = 0
+
+
+class FleetSimulator:
+    def __init__(self, cfg: FleetConfig, jobs: Sequence[JobSpec]):
+        names = [j.name for j in jobs]
+        if len(set(names)) != len(names):
+            raise ValueError("duplicate job names")
+        self.cfg = cfg
+        self.spec = hwspec.get(cfg.tpu)
+        self.engine = EventEngine(cfg.seed)
+        self.sched = OCSPodScheduler(cfg.total_cubes,
+                                     contiguous=cfg.contiguous)
+        self.trace = TraceRecorder()
+        self.jobs: Dict[str, JobRuntime] = {
+            j.name: JobRuntime(spec=j) for j in jobs}
+        self.stats = {"cube_failures": 0, "repairs": 0, "starvations": 0,
+                      "sdc_corruptions": 0, "sdc_detections": 0}
+        self._fail_ev: Dict[int, Event] = {}
+        self._hosts_per_cube = max(1, CUBE.chips // self.spec.tpus_per_host)
+        for j in jobs:
+            self.engine.schedule_at(j.arrival_s, "arrival", job=j.name)
+        if cfg.host_mtbf_hours is not None:
+            for cube in range(cfg.total_cubes):
+                self._schedule_cube_failure(cube)
+
+    # -------------------------------------------------------------- helpers
+
+    @property
+    def _cube_mtbf_s(self) -> float:
+        assert self.cfg.host_mtbf_hours is not None
+        return self.cfg.host_mtbf_hours * 3600.0 / self._hosts_per_cube
+
+    def _schedule_cube_failure(self, cube: int) -> None:
+        delay = self.engine.draw_exponential(self._cube_mtbf_s)
+        self._fail_ev[cube] = self.engine.schedule(
+            delay, "cube_fail", cube=cube)
+
+    def _charge_progress(self, job: JobRuntime, target: int) -> None:
+        """Record productive steps base_step..target on the ledger, with
+        an idle checkpoint mark at every absolute boundary crossed —
+        exactly the grammar the ResilientTrainer's main loop produces.
+        Boundaries are strictly greater than base_step: a segment that
+        starts at a restored step does not re-snapshot it."""
+        st = job.spec.step_time_s
+        every = job.spec.checkpoint_every_steps
+        cur = job.base_step
+        t0 = job.segment_start
+        next_b = (cur // every + 1) * every
+
+        def run_steps(upto: int) -> None:
+            nonlocal cur, t0
+            k = upto - cur
+            if k > 0:
+                job.ledger.record_steps(k * st, steps=k)
+                self.trace.duration(job.spec.name, "train", t0, k * st,
+                                    args={"steps": f"{cur}..{upto}"})
+                cur, t0 = upto, t0 + k * st
+
+        while next_b <= target:
+            run_steps(next_b)
+            job.ledger.record_idle(0.0, note=f"ckpt @{next_b}")
+            self.trace.duration(job.spec.name, "ckpt", t0, 0.0,
+                                args={"step": next_b})
+            job.last_ckpt_step = next_b
+            next_b += every
+        run_steps(target)
+        job.base_step = cur
+        job.segment_start = t0
+
+    def _schedule_segment(self, job: JobRuntime) -> None:
+        """(Re)issue the job's timeline events from the current segment.
+        Bumps the epoch so events from the previous timeline are stale."""
+        job.epoch += 1
+        spec, e = job.spec, job.epoch
+        st = spec.step_time_s
+        t_done = job.segment_start + (spec.total_steps - job.base_step) * st
+        self.engine.schedule_at(t_done, "complete", job=spec.name, epoch=e)
+        planned = job.next_planned_failure()
+        if planned is not None and planned[0] >= job.base_step:
+            step, cube = planned
+            t = job.segment_start + (step - job.base_step) * st
+            self.engine.schedule_at(t, "plan_fail", job=spec.name,
+                                    step=step, cube=cube, epoch=e)
+        if self.cfg.sdc is not None:
+            if job.sdc_corrupt_step is not None:
+                # an undetected corruption survived a fail-stop restore
+                # (the snapshot postdated it): re-arm its detection for
+                # the new timeline
+                delay = self.cfg.sdc.draw_detection_delay_s(
+                    self.engine.rng)
+                t = max(self.engine.now, job.segment_start) + delay
+                self.engine.schedule_at(t, "sdc_detect", job=spec.name,
+                                        epoch=e)
+            else:
+                dt = self.cfg.sdc.draw_time_to_corruption_s(
+                    self.engine.rng, spec.chips)
+                if dt != float("inf"):
+                    t = max(self.engine.now, job.segment_start) + dt
+                    self.engine.schedule_at(t, "sdc_corrupt",
+                                            job=spec.name, epoch=e)
+
+    # ------------------------------------------------------------ admission
+
+    def _try_admit(self, job: JobRuntime) -> bool:
+        now = self.engine.now
+        alloc = self.sched.allocate(job.spec.name, job.spec.chips)
+        if alloc is None:
+            if job.state != "queued":
+                job.state = "queued"
+                job.queued_since = now
+            return False
+        job.alloc = alloc
+        wait = now - job.queued_since if job.state == "queued" else 0.0
+        if wait > 0.0:
+            job.ledger.record_idle(wait, note="queued for cubes")
+            self.trace.duration(job.spec.name, "queued", now - wait, wait)
+        if job.pending_resume_step is None:
+            # fresh start: the resilience contract's bootstrap snapshot
+            job.ledger.record_idle(0.0, note="bootstrap ckpt")
+            job.base_step = 0
+            job.last_ckpt_step = 0
+            job.segment_start = now
+        else:
+            rework = job.pending_resume_step - job.last_ckpt_step
+            st = job.spec.step_time_s
+            job.ledger.record_restore(self.cfg.restore_s,
+                                      note="restore after starvation")
+            job.ledger.record_rework(rework * st, steps=rework)
+            self.trace.duration(job.spec.name, "restore", now,
+                                self.cfg.restore_s)
+            self.trace.duration(job.spec.name, "rework",
+                                now + self.cfg.restore_s, rework * st)
+            job.base_step = job.pending_resume_step
+            job.segment_start = now + self.cfg.restore_s + rework * st
+            job.pending_resume_step = None
+        job.state = "running"
+        self._schedule_segment(job)
+        self.trace.counter("pod", now, {"spare_cubes":
+                                        self.sched.spare_cubes()})
+        return True
+
+    def _admit_queued(self) -> None:
+        queued = sorted((j for j in self.jobs.values()
+                         if j.state == "queued"),
+                        key=lambda j: (j.queued_since, j.spec.name))
+        for job in queued:
+            self._try_admit(job)
+
+    # ------------------------------------------------------------- failures
+
+    def _handle_job_failure(self, job: JobRuntime, cube: int,
+                            note: str) -> None:
+        now = self.engine.now
+        cfg = self.cfg
+        st = job.spec.step_time_s
+        steps_now = job.steps_at(now)
+        self._charge_progress(job, steps_now)
+        # a stochastic failure lands mid-step: the aborted in-flight
+        # fraction is wall time too, folded into the detection charge
+        # (zero for planned failures, which fire on step boundaries)
+        partial = min(max(now - job.segment_start, 0.0), st)
+        job.ledger.record_detection(cfg.detect_s + partial, note=note)
+        self.trace.duration(job.spec.name, "detect", now, cfg.detect_s)
+        if job.sdc_corrupt_step is not None and \
+                job.last_ckpt_step <= job.sdc_corrupt_step:
+            # the fail-stop restore rolls back past the corruption point:
+            # the corrupted state really is wiped. (A snapshot *after*
+            # the corruption is poisoned — then the corruption survives
+            # the restore and _schedule_segment re-arms its detection.)
+            job.sdc_corrupt_step = None
+        patched = self.sched.substitute(job.spec.name)
+        if patched is None:
+            # no spares (or pre-OCS pod): release and wait for capacity.
+            # Only detection is on the books so far; restore + rework are
+            # charged once, at re-admission. The queue clock starts after
+            # the detection window so the two charges never overlap.
+            self.sched.release(job.spec.name)
+            job.alloc = None
+            job.pending_resume_step = steps_now
+            job.state = "queued"
+            job.queued_since = now + cfg.detect_s
+            job.epoch += 1  # timeline events are void
+            self.stats["starvations"] += 1
+            self.trace.instant("starved", now, {"job": job.spec.name})
+            self._admit_queued()  # the freed cubes may fit a smaller job
+            return
+        job.alloc = patched
+        restore = cfg.reconfig_s + cfg.restore_s
+        rework = steps_now - job.last_ckpt_step
+        job.ledger.record_restore(restore, note="ocs reconfig + restore")
+        job.ledger.record_rework(rework * st, steps=rework)
+        t = now + cfg.detect_s
+        self.trace.duration(job.spec.name, "restore", t, restore)
+        self.trace.duration(job.spec.name, "rework", t + restore,
+                            rework * st)
+        self.trace.instant("ocs_reconfig", now,
+                           {"job": job.spec.name, "cube": cube})
+        job.base_step = steps_now
+        job.segment_start = t + restore + rework * st
+        self._schedule_segment(job)
+
+    # -------------------------------------------------------------- handlers
+
+    def _on_arrival(self, ev: Event) -> None:
+        job = self.jobs[ev["job"]]
+        job.queued_since = self.engine.now
+        self._try_admit(job)
+
+    def _on_complete(self, ev: Event) -> None:
+        job = self.jobs[ev["job"]]
+        if ev["epoch"] != job.epoch or job.state != "running":
+            return
+        self._charge_progress(job, job.spec.total_steps)
+        job.state = "done"
+        job.completed_at = self.engine.now
+        self.sched.release(job.spec.name)
+        job.alloc = None
+        self.trace.instant("job_done", self.engine.now,
+                           {"job": job.spec.name})
+        self._admit_queued()
+
+    def _on_cube_fail(self, ev: Event) -> None:
+        cube = ev["cube"]
+        self._fail_ev.pop(cube, None)
+        if cube in self.sched.failed_cubes:
+            return  # already down (SDC map-out); repair will redraw
+        self.stats["cube_failures"] += 1
+        # the cube-level Poisson process aggregates its hosts' hazards;
+        # pick which host actually died and map out through the
+        # host-granular entry point (the paper's primary hazard)
+        host = cube * self._hosts_per_cube + int(
+            self.engine.rng.integers(self._hosts_per_cube))
+        _, impacted = self.sched.fail_host(host, self.spec.tpus_per_host)
+        self.trace.instant("cube_fail", self.engine.now,
+                           {"cube": cube, "host": host})
+        self.engine.schedule(self.cfg.repair_hours * 3600.0, "repair",
+                             cube=cube)
+        if impacted is not None:
+            self._handle_job_failure(self.jobs[impacted], cube,
+                                     note=f"cube {cube} died")
+
+    def _on_plan_fail(self, ev: Event) -> None:
+        job = self.jobs[ev["job"]]
+        if ev["epoch"] != job.epoch or job.state != "running":
+            return
+        step = ev["step"]
+        job.plan.pop(step, None)
+        cube = ev["cube"]
+        if cube < 0:
+            assert job.alloc is not None
+            cube = job.alloc.cubes[0]
+        self.stats["cube_failures"] += 1
+        impacted = self.sched.fail_cube(cube)
+        self.trace.instant("cube_fail", self.engine.now,
+                           {"cube": cube, "planned_step": step})
+        self.engine.schedule(self.cfg.repair_hours * 3600.0, "repair",
+                             cube=cube)
+        if impacted is not None and impacted != job.spec.name:
+            # the planned cube belongs to another job: its owner takes a
+            # real failure; the planning job still observes its planned
+            # interruption (driver semantics: a planned failure always
+            # restores the planning job, owned cube or not)
+            self._handle_job_failure(self.jobs[impacted], cube,
+                                     note=f"cube {cube} died")
+        self._handle_job_failure(job, cube, note=f"cube {cube} died")
+
+    def _on_repair(self, ev: Event) -> None:
+        cube = ev["cube"]
+        self.sched.repair_cube(cube)
+        self.stats["repairs"] += 1
+        self.trace.instant("repair", self.engine.now, {"cube": cube})
+        if self.cfg.host_mtbf_hours is not None and \
+                cube not in self._fail_ev:
+            self._schedule_cube_failure(cube)
+        self._admit_queued()
+
+    def _on_sdc_corrupt(self, ev: Event) -> None:
+        job = self.jobs[ev["job"]]
+        if ev["epoch"] != job.epoch or job.state != "running":
+            return
+        assert self.cfg.sdc is not None
+        corrupt_step = job.steps_at(self.engine.now)
+        if corrupt_step >= job.spec.total_steps:
+            return
+        job.sdc_corrupt_step = corrupt_step
+        self.stats["sdc_corruptions"] += 1
+        delay = self.cfg.sdc.draw_detection_delay_s(self.engine.rng)
+        self.engine.schedule(delay, "sdc_detect", job=job.spec.name,
+                             epoch=job.epoch)
+        self.trace.instant("sdc_corrupt", self.engine.now,
+                           {"job": job.spec.name, "step": corrupt_step})
+
+    def _on_sdc_detect(self, ev: Event) -> None:
+        job = self.jobs[ev["job"]]
+        if ev["epoch"] != job.epoch or job.state != "running" or \
+                job.sdc_corrupt_step is None:
+            # stale timeline: either a fail-stop restore wiped the
+            # corrupted state (sdc_corrupt_step cleared) or the event was
+            # superseded by a re-armed detection on a newer epoch
+            return
+        now = self.engine.now
+        cfg = self.cfg
+        st = job.spec.step_time_s
+        every = job.spec.checkpoint_every_steps
+        steps_now = job.steps_at(now)
+        self._charge_progress(job, steps_now)
+        # every checkpoint since the corruption is poisoned: roll back to
+        # the newest snapshot at or before the corruption step
+        rollback = min(job.last_ckpt_step,
+                       job.sdc_corrupt_step // every * every)
+        partial = min(max(now - job.segment_start, 0.0), st)
+        job.ledger.record_detection(cfg.detect_s + partial,
+                                    note="sdc screen hit")
+        self.stats["sdc_detections"] += 1
+        self.trace.instant("sdc_detect", now, {
+            "job": job.spec.name, "corrupt_step": job.sdc_corrupt_step,
+            "rollback_to": rollback})
+        self.trace.duration(job.spec.name, "detect", now, cfg.detect_s)
+        job.sdc_corrupt_step = None
+        job.last_ckpt_step = rollback
+        # map out the defective cube, like FBIST screening would
+        assert job.alloc is not None
+        cube = job.alloc.cubes[0]
+        pending = self._fail_ev.pop(cube, None)
+        if pending is not None:
+            self.engine.cancel(pending)
+        self.sched.fail_cube(cube)
+        self.engine.schedule(cfg.repair_hours * 3600.0, "repair", cube=cube)
+        patched = self.sched.substitute(job.spec.name)
+        if patched is None:
+            # starved: restore + rework (from the rolled-back snapshot)
+            # are charged once, at re-admission
+            self.sched.release(job.spec.name)
+            job.alloc = None
+            job.pending_resume_step = steps_now
+            job.state = "queued"
+            job.queued_since = now + cfg.detect_s
+            job.epoch += 1
+            self.stats["starvations"] += 1
+            self.trace.instant("starved", now, {"job": job.spec.name})
+            self._admit_queued()
+            return
+        job.alloc = patched
+        restore = cfg.reconfig_s + cfg.restore_s
+        rework = steps_now - rollback
+        job.ledger.record_restore(restore, note="sdc rollback + map-out")
+        job.ledger.record_rework(rework * st, steps=rework,
+                                 note="sdc rework (poisoned ckpts)")
+        self.trace.duration(job.spec.name, "restore", now + cfg.detect_s,
+                            restore)
+        self.trace.duration(job.spec.name, "rework",
+                            now + cfg.detect_s + restore, rework * st)
+        job.base_step = steps_now
+        job.segment_start = now + cfg.detect_s + restore + rework * st
+        self._schedule_segment(job)
+
+    _HANDLERS = {
+        "arrival": _on_arrival,
+        "complete": _on_complete,
+        "cube_fail": _on_cube_fail,
+        "plan_fail": _on_plan_fail,
+        "repair": _on_repair,
+        "sdc_corrupt": _on_sdc_corrupt,
+        "sdc_detect": _on_sdc_detect,
+    }
+
+    # ------------------------------------------------------------------ run
+
+    def run(self, until_s: float, *, check_invariants: bool = True) -> None:
+        """Advance simulated time to ``until_s``, then close the books:
+        running jobs charge whole steps completed by the horizon so the
+        per-job ledgers describe exactly the simulated window."""
+        for ev in self.engine.drain_until(until_s):
+            self._HANDLERS[ev.kind](self, ev)
+            if check_invariants:
+                self.sched.check_invariants()
+        for job in self.jobs.values():
+            if job.state == "running":
+                self._charge_progress(job, job.steps_at(until_s))
+            elif job.state == "queued":
+                wait = until_s - job.queued_since
+                if wait > 0.0:
+                    job.ledger.record_idle(wait, note="queued for cubes")
+                    job.queued_since = until_s
+
+    # -------------------------------------------------------------- reports
+
+    def summary(self) -> Dict[str, Dict[str, float]]:
+        out: Dict[str, Dict[str, float]] = {}
+        for name, job in self.jobs.items():
+            s = job.ledger.summary()
+            s["state_done"] = float(job.state == "done")
+            s["steps_done"] = float(job.base_step)
+            out[name] = s
+        return out
+
+    def fleet_summary(self) -> Dict[str, float]:
+        gp = [j.ledger.goodput for j in self.jobs.values()
+              if j.ledger.total_seconds > 0]
+        return {
+            **{k: float(v) for k, v in self.stats.items()},
+            "ocs_reconfigs": float(self.sched.reconfig_count),
+            "spare_cubes": float(self.sched.spare_cubes()),
+            "events_processed": float(self.engine.processed),
+            "jobs_done": float(sum(j.state == "done"
+                                   for j in self.jobs.values())),
+            "min_goodput": min(gp) if gp else 1.0,
+            "mean_goodput": sum(gp) / len(gp) if gp else 1.0,
+        }

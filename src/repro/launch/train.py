@@ -94,6 +94,7 @@ def main() -> None:
           f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")
     print("goodput:", {k: round(v, 4)
                        for k, v in ledger.summary().items()})
+    print("replay:", trainer.replay_summary())
     print("carbon:", {k: f"{v:.3e}" for k, v in carbon.summary().items()})
 
 

@@ -38,16 +38,18 @@ def cache_spec(cfg: ModelConfig, batch: int, window: int,
 
 
 def prefill_fn(params, batch, cfg: ModelConfig, ctx: ModelContext,
-               window: int, logits_at=None):
+               window: int, logits_at=None, pad_left=None):
     """``logits_at`` (B,): index of the position whose logits to return
-    (decoder-only; lets servers pad prompts to one compile length)."""
+    (decoder-only; lets servers pad prompts to one compile length).
+    ``pad_left`` (B,): leading pad count for front-padded state-family
+    prompts (see lm_prefill)."""
     if cfg.is_encoder_decoder:
-        if logits_at is not None:
+        if logits_at is not None or pad_left is not None:
             raise NotImplementedError(
-                "logits_at requires a decoder-only model")
+                "logits_at/pad_left require a decoder-only model")
         return encdec.encdec_prefill(params, batch, cfg, ctx, window)
     return lm.lm_prefill(params, batch["tokens"], cfg, ctx, window,
-                         logits_at=logits_at)
+                         logits_at=logits_at, pad_left=pad_left)
 
 
 def decode_fn(params, token, cache, cfg: ModelConfig, ctx: ModelContext):

@@ -271,13 +271,24 @@ def init_cache(spec: Any) -> Any:
 
 
 def sublayer_prefill(p, x, cache, cfg: ModelConfig, ctx: ModelContext, idx,
-                     mrope_positions=None):
-    """Like sublayer_forward but writes the cache. x: (B,S,D)."""
+                     mrope_positions=None, seq_mask=None):
+    """Like sublayer_forward but writes the cache. x: (B,S,D).
+
+    ``seq_mask`` (B,S) marks live positions when the server front-pads a
+    prompt to a bucketed length (state families only): with zeroed
+    embeddings the residual stream is exactly 0 through the pad prefix
+    (every projection here is bias-free and every core output is gated
+    by a zero), so masking the one biased intermediate — mamba's conv —
+    keeps the recurrent state untouched until the first live token."""
     kind = cfg.sublayer_kinds()[idx]
     dtype = ctx.compute_dtype
     b, s, _ = x.shape
     h = rms_norm(x, p["ln1"], cfg.norm_eps)
     if kind == "attn":
+        if seq_mask is not None:
+            raise ValueError(
+                "seq_mask (front padding) requires a state-family stack; "
+                "attention positions would shift")
         q, k, v = _project_qkv(p["core"], h, cfg, dtype)
         positions = jnp.broadcast_to(jnp.arange(s), (b, s))
         q, k = apply_positional(q, k, cfg, positions, mrope_positions)
@@ -300,7 +311,7 @@ def sublayer_prefill(p, x, cache, cfg: ModelConfig, ctx: ModelContext, idx,
     elif kind == "mamba":
         core, (conv, ssm) = mamba_forward(
             p["core"], h, cfg, dtype, chunk=ctx.mamba_chunk,
-            return_state=True)
+            return_state=True, seq_mask=seq_mask)
         new_cache = {"conv": conv, "ssm": ssm}
     else:
         core, (tok, wkv) = rwkv_time_mix(
@@ -377,12 +388,13 @@ def sublayer_decode(p, x, cache, pos, cfg: ModelConfig, ctx: ModelContext,
     return x, new_cache
 
 
-def block_prefill(block_params, x, cache, cfg, ctx, mrope_positions=None):
+def block_prefill(block_params, x, cache, cfg, ctx, mrope_positions=None,
+                  seq_mask=None):
     new_cache = {}
     for i in range(cfg.block_len):
         x, new_cache[f"sl{i}"] = sublayer_prefill(
             block_params[f"sl{i}"], x, cache[f"sl{i}"], cfg, ctx, i,
-            mrope_positions)
+            mrope_positions, seq_mask)
     return x, new_cache
 
 
@@ -487,8 +499,19 @@ def sublayer_decode_paged(p, x, pages, page_table, pos, cfg: ModelConfig,
     if ks is not None:
         new_pages["k_scale"] = pages["k_scale"].at[pid, slot].set(ks)
         new_pages["v_scale"] = pages["v_scale"].at[pid, slot].set(vs)
-    kg, vg = _paged_gather(new_pages, page_table, dtype)
-    out = decode_attention(q, kg, vg, pos + 1, cfg)
+    if ctx.attn_impl in ("pallas", "pallas_interpret") and ks is None:
+        # stream pages straight through the scalar-prefetch Pallas kernel
+        # — no HBM materialization of a contiguous per-request cache.
+        # int8 pages need the dequant path, so they stay on the oracle.
+        from repro.kernels import ops as kops
+        out = kops.paged_decode_attention(
+            q[:, 0], new_pages["k"], new_pages["v"], page_table, pos + 1,
+            impl=("interpret" if ctx.attn_impl == "pallas_interpret"
+                  else "pallas"),
+            window=cfg.sliding_window)[:, None]
+    else:
+        kg, vg = _paged_gather(new_pages, page_table, dtype)
+        out = decode_attention(q, kg, vg, pos + 1, cfg)
     core = jnp.einsum("bshk,hkd->bsd", out, p["core"]["wo"].astype(dtype))
     x = x + core
     h = rms_norm(x, p["ln2"], cfg.norm_eps)

@@ -94,23 +94,36 @@ def lm_cache_spec(cfg: ModelConfig, batch: int, window: int,
 
 def lm_prefill(params: Dict[str, Any], tokens: Array, cfg: ModelConfig,
                ctx: ModelContext, window: int,
-               logits_at: Optional[Array] = None
+               logits_at: Optional[Array] = None,
+               pad_left: Optional[Array] = None
                ) -> Tuple[Array, Dict[str, Any]]:
     """Full-sequence prefill. Returns (last-token logits, cache).
 
     ``logits_at`` (B,) selects the position whose logits are returned
     (default: the last). Servers that pad prompts to a fixed compile
     length pass the true last-token index per request here; under causal
-    attention the padded tail never influences the valid prefix."""
+    attention the padded tail never influences the valid prefix.
+
+    ``pad_left`` (B,) declares the first N positions to be padding for
+    *state-family* stacks (mamba/rwkv): their embeddings are zeroed and
+    the recurrent state provably stays at its zero initial value through
+    the pad prefix, so servers can pad prompts up to a bucketed compile
+    length from the front. Attention sublayers reject it (front padding
+    would shift their positions)."""
     b, s = tokens.shape
     x = embed_lookup(params["embed"], tokens, ctx.compute_dtype)
+    live = None
+    if pad_left is not None:
+        live = jnp.arange(s)[None, :] >= pad_left[:, None]  # (B, S)
+        x = x * live[..., None].astype(x.dtype)
     x = ctx.shard(x, ("batch", "act_seq", "embed"))
     cache0 = jax.tree.map(
         lambda sd: jnp.zeros(sd.shape, sd.dtype),
         block_cache_spec(cfg, b, window, ctx))
 
     def body(x, bp):
-        x, new_cache = block_prefill(bp, x, cache0, cfg, ctx)
+        x, new_cache = block_prefill(bp, x, cache0, cfg, ctx,
+                                     seq_mask=live)
         return x, new_cache
 
     x, caches = jax.lax.scan(jax.checkpoint(body), x, params["blocks"])

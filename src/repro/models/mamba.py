@@ -101,8 +101,15 @@ def mamba_forward(
     chunk: int = 256,
     init_state: Optional[Tuple[Array, Array]] = None,
     return_state: bool = False,
+    seq_mask: Optional[Array] = None,
 ):
-    """x: (B, S, D). Returns out (B,S,D) [, (conv_cache, ssm_state)]."""
+    """x: (B, S, D). Returns out (B,S,D) [, (conv_cache, ssm_state)].
+
+    ``seq_mask`` (B,S) zeroes the post-conv activation at padded
+    positions: with zero inputs the only nonzero intermediate is the conv
+    bias, and masking it keeps dBx = 0 there, so a zero-initialized state
+    passes through a pad *prefix* unchanged (front-padded bucketed
+    prefill)."""
     b, s, d = x.shape
     di, n, dr, w = cfg.d_inner, cfg.ssm_state_dim, cfg.dt_rank, \
         cfg.ssm_conv_width
@@ -118,6 +125,8 @@ def mamba_forward(
     xc = sum(xpad[:, i:i + s, :] * conv_w[i] for i in range(w))
     xc = jax.nn.silu((xc + params["conv_b"].astype(compute_dtype))
                      .astype(jnp.float32)).astype(compute_dtype)
+    if seq_mask is not None:
+        xc = xc * seq_mask[..., None].astype(xc.dtype)
     new_conv_cache = xpad[:, s:, :]  # last w-1 inputs
 
     # input-dependent dt, B, C

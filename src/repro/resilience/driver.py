@@ -175,3 +175,15 @@ class ResilientTrainer:
                 last_ckpt_step = step
         self.ckpt.wait()
         return state, ledger, losses
+
+    def replay_summary(self) -> Dict[str, int]:
+        """Execution counts from the StepRecord ledger: how many
+        train_step calls ran in total, how many were replays (rework
+        after a restore), and the effective (non-replayed) count."""
+        recs = getattr(self, "records", [])
+        replayed = sum(1 for r in recs if r.replayed)
+        return {
+            "executions": len(recs),
+            "replayed_steps": replayed,
+            "effective_steps": len(recs) - replayed,
+        }

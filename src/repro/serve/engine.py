@@ -66,7 +66,8 @@ class ServeEngine:
         if self.paged and not api.supports_paged_decode(cfg):
             raise ValueError(f"{cfg.name}: paged serving unsupported")
         self.counters = {"prefills": 0, "chunks": 0, "decode_steps": 0,
-                         "host_syncs": 0, "pertoken_steps": 0}
+                         "host_syncs": 0, "pertoken_steps": 0,
+                         "pages_trimmed": 0}
         if self.paged:
             # +1 page of table headroom: a finished slot's frozen pos can
             # sit exactly at `window`, whose page index must still resolve
@@ -88,6 +89,16 @@ class ServeEngine:
         else:
             self._prefill_ctx = ctx
             self.kv = DenseKVCache(cfg, ctx, self.window, self.max_batch)
+        # Pure state-family stacks (mamba/rwkv) carry O(1) state, so the
+        # dense prefill would otherwise compile once per prompt length.
+        # Front-padding to power-of-two buckets (masked embeddings; the
+        # recurrent state stays zero through the pad prefix) bounds the
+        # compile count to log2(window).
+        self.bucket_prefill = (not self.paged
+                               and not cfg.is_encoder_decoder
+                               and set(cfg.sublayer_kinds()) <=
+                               {"mamba", "rwkv"})
+        self.prefill_bucket_sizes: set = set()
         self._build_jitted()
         self._reset_carry()
 
@@ -133,8 +144,16 @@ class ServeEngine:
             first = self._pick(logits, key, temp)
             return first, cache
 
+        def prefill_bucketed(params, tokens, pad_left, key, temp):
+            logits, cache = api.prefill_fn(
+                params, {"tokens": tokens}, cfg, ctx, window=self.window,
+                pad_left=pad_left)
+            first = self._pick(logits, key, temp)
+            return first, cache
+
         self._prefill_paged = jax.jit(prefill_paged)
         self._prefill_dense = jax.jit(prefill_dense)
+        self._prefill_bucketed = jax.jit(prefill_bucketed)
 
         # ---- paged page write -------------------------------------------
         from repro.models.blocks import paged_quantize
@@ -231,6 +250,15 @@ class ServeEngine:
             first, blocks = self._prefill_paged(
                 params, jnp.asarray(padded), jnp.int32(s), pkey, temp)
             self.kv.write_prefill(self._write_pages, slot, blocks)
+        elif self.bucket_prefill and not req.extras:
+            sb = 1 << max(3, (s - 1).bit_length())  # pow2 >= s, floor 8
+            self.prefill_bucket_sizes.add(sb)
+            padded = np.zeros((1, sb), np.int32)
+            padded[0, sb - s:] = rp
+            first, cache = self._prefill_bucketed(
+                params, jnp.asarray(padded),
+                jnp.full((1,), sb - s, jnp.int32), pkey, temp)
+            self.kv.write_prefill(self._write_dense, slot, cache)
         else:
             batch = {"tokens": jnp.asarray(rp[None, :])}
             for k, v in req.extras.items():
@@ -340,7 +368,8 @@ class ServeEngine:
             self.counters["chunks"] += 1
             self.counters["decode_steps"] += self.chunk
             # 4) drain: the single host sync per chunk
-            toks_h, done_h = jax.device_get((toks, self._done))
+            toks_h, done_h, pos_h = jax.device_get(
+                (toks, self._done, self._pos))
             self.counters["host_syncs"] += 1
             for slot in list(sched.running):
                 req = sched.running[slot]
@@ -352,6 +381,11 @@ class ServeEngine:
                     sched.complete(slot)
                     if self.paged:
                         self.kv.release(slot)
+                elif self.paged and self.cfg.sliding_window is not None:
+                    # SWA: positions behind pos - window are masked out of
+                    # attention; release their pages back to the pool
+                    self.counters["pages_trimmed"] += self.kv.trim(
+                        slot, int(pos_h[slot]) - self.cfg.sliding_window)
         return {r.rid: np.asarray(r.generated, np.int32)
                 for r in sched.finished}
 

@@ -65,6 +65,11 @@ class PagedKVCache:
         # host mirror of the table; pushed to device on change
         self._table = np.zeros((self.max_batch, self.max_pages_per_seq),
                                np.int32)
+        # token-position frontier per slot: page indices < frontier have
+        # been allocated at some point (monotonic per lease). Needed
+        # because SWA trimming punches holes in the table — ``grow`` must
+        # extend past the frontier, never refill trimmed history.
+        self._frontier = np.zeros(self.max_batch, np.int64)
 
     # ---------------------------------------------------------- allocation
 
@@ -80,7 +85,7 @@ class PagedKVCache:
     def grow(self, slot: int, target_tokens: int) -> bool:
         """Ensure the slot owns pages covering ``target_tokens``; returns
         False (no change) when the pool cannot satisfy the request."""
-        have = len(self.slot_pages(slot))
+        have = int(self._frontier[slot])
         need = self.pages_for(target_tokens) - have
         if need <= 0:
             return True
@@ -88,11 +93,30 @@ class PagedKVCache:
             return False
         for i in range(need):
             self._table[slot, have + i] = self._free.pop()
+        self._frontier[slot] = have + need
         return True
+
+    def trim(self, slot: int, keep_from_token: int) -> int:
+        """Free pages that lie wholly behind ``keep_from_token`` (the
+        sliding-window lower bound: the attention mask already ignores
+        those positions, so only the memory was still held). Their table
+        entries become the trash page; the frontier is untouched, so the
+        slot keeps appending at its absolute position. Returns the number
+        of pages returned to the pool."""
+        first_keep = max(0, keep_from_token) // self.page_size
+        freed = 0
+        for i in range(min(first_keep, int(self._frontier[slot]))):
+            page = int(self._table[slot, i])
+            if page != 0:
+                self._free.append(page)
+                self._table[slot, i] = 0
+                freed += 1
+        return freed
 
     def release(self, slot: int) -> None:
         self._free.extend(self.slot_pages(slot)[::-1])
         self._table[slot] = 0
+        self._frontier[slot] = 0
 
     def table_device(self) -> Array:
         return jnp.asarray(self._table)

@@ -1,0 +1,407 @@
+"""Fleet simulator: event-engine determinism, goodput bounds, scheduler
+invariants through reconfigurations, SDC rollback semantics, checkpoint-
+interval policy, power/carbon ratios, Chrome-trace export, and the
+sim-vs-ResilientTrainer bridge."""
+
+import json
+
+import pytest
+from optional_deps import hypothesis, st  # real or deterministic shim
+
+from repro.core import hwspec
+from repro.core.goodput import GoodputLedger, modeled_goodput
+from repro.core.sdc import SDCRateModel
+from repro.fleet import (EventEngine, FleetConfig, FleetSimulator, JobSpec,
+                         PowerModel, generation_efficiency_table,
+                         optimal_checkpoint_interval_s,
+                         search_checkpoint_interval, simulate_trainer_plan,
+                         sustainability_ratios)
+
+
+def _ledger_dump(led: GoodputLedger):
+    return [(e.kind, round(e.seconds, 9), e.steps) for e in led.events]
+
+
+# ------------------------------------------------------------ event engine
+
+
+def test_event_engine_deterministic_order():
+    def fill(eng):
+        eng.schedule_at(5.0, "a")
+        eng.schedule_at(1.0, "b")
+        eng.schedule_at(5.0, "c")  # tie with "a": insertion order wins
+        eng.schedule_at(3.0, "d", x=1)
+        return [(e.time, e.kind) for e in eng.drain_until(10.0)]
+
+    assert fill(EventEngine(0)) == fill(EventEngine(0)) == [
+        (1.0, "b"), (3.0, "d"), (5.0, "a"), (5.0, "c")]
+
+
+def test_event_engine_cancel_and_horizon():
+    eng = EventEngine(0)
+    ev = eng.schedule_at(2.0, "x")
+    eng.schedule_at(4.0, "y")
+    eng.schedule_at(20.0, "z")
+    eng.cancel(ev)
+    got = [e.kind for e in eng.drain_until(10.0)]
+    assert got == ["y"]
+    assert eng.now == 10.0
+    assert eng.peek_time() == 20.0  # beyond-horizon event still queued
+
+
+def test_event_engine_rejects_past():
+    eng = EventEngine(0)
+    eng.schedule_at(5.0, "a")
+    assert eng.pop().kind == "a"
+    with pytest.raises(ValueError):
+        eng.schedule_at(1.0, "late")
+
+
+# -------------------------------------------------- deterministic failure plan
+
+
+def test_planned_failures_reproduce_trainer_grammar():
+    """Hand-derived ResilientTrainer event grammar for ckpt_every=6,
+    failures at steps 9 and 14, 18 steps total."""
+    led = simulate_trainer_plan(total_steps=18, checkpoint_every=6,
+                                failures={9: 0, 14: 1})
+    assert led.structure() == [
+        ("idle", 0), ("steps", 6), ("idle", 0), ("steps", 3),
+        ("detect", 0), ("restore", 0), ("rework", 3),
+        ("steps", 3), ("idle", 0), ("steps", 2),
+        ("detect", 0), ("restore", 0), ("rework", 2),
+        ("steps", 4), ("idle", 0)]
+    assert led.effective_steps == 18
+
+
+def test_sim_determinism_bitwise():
+    """Same seed, same config -> identical ledgers, stats and trace."""
+
+    def build():
+        cfg = FleetConfig(tpu="ironwood", total_cubes=40,
+                          host_mtbf_hours=500.0, repair_hours=2.0,
+                          sdc=SDCRateModel(rate_per_chip_hour=2e-5,
+                                           screen_interval_s=300.0),
+                          seed=7)
+        jobs = [JobSpec(name=f"j{i}", chips=512, total_steps=10**9,
+                        step_time_s=1.5, checkpoint_every_steps=200)
+                for i in range(3)]
+        sim = FleetSimulator(cfg, jobs)
+        sim.run(86400.0)
+        return sim
+
+    a, b = build(), build()
+    assert a.stats == b.stats
+    for name in a.jobs:
+        assert _ledger_dump(a.jobs[name].ledger) == \
+            _ledger_dump(b.jobs[name].ledger)
+    assert a.trace.chrome_trace() == b.trace.chrome_trace()
+    assert a.stats["cube_failures"] > 0  # scenario actually exercised
+
+
+@hypothesis.given(
+    seed=st.integers(min_value=0, max_value=10_000),
+    mtbf=st.floats(min_value=50.0, max_value=5000.0),
+    njobs=st.integers(min_value=1, max_value=5),
+)
+@hypothesis.settings(max_examples=15, deadline=None)
+def test_goodput_bounds_and_invariants_property(seed, mtbf, njobs):
+    """Whatever the failure pattern: every goodput stays in [0, 1], the
+    scheduler's no-shared-cube invariant holds through every event
+    (checked inside run()), and effective steps never exceed the total."""
+    cfg = FleetConfig(tpu="tpu_v4", total_cubes=24,
+                      host_mtbf_hours=mtbf, repair_hours=1.0, seed=seed)
+    jobs = [JobSpec(name=f"j{i}", chips=256, total_steps=2000,
+                    step_time_s=1.0, checkpoint_every_steps=100)
+            for i in range(njobs)]
+    sim = FleetSimulator(cfg, jobs)
+    sim.run(40_000.0)  # check_invariants=True asserts after every event
+    for job in sim.jobs.values():
+        assert 0.0 <= job.ledger.goodput <= 1.0
+        assert job.ledger.effective_steps <= job.spec.total_steps
+        if job.state == "done":
+            # wall-clock conservation: the ledger partitions exactly the
+            # arrival-to-completion span, nothing dropped or doubled
+            assert job.ledger.total_seconds == pytest.approx(
+                job.completed_at - job.spec.arrival_s)
+    fs = sim.fleet_summary()
+    assert 0.0 <= fs["min_goodput"] <= 1.0
+
+
+def test_reconfigs_do_not_starve_with_spares():
+    """Ironwood headline: four 2K-chip jobs on 144 cubes ride through
+    failures on 16 spares — substitutions happen, nobody starves."""
+    cfg = FleetConfig(tpu="ironwood", total_cubes=144,
+                      host_mtbf_hours=2000.0, repair_hours=4.0, seed=3)
+    jobs = [JobSpec(name=f"job{i}", chips=2048, total_steps=10**9,
+                    step_time_s=1.0, checkpoint_every_steps=600)
+            for i in range(4)]
+    sim = FleetSimulator(cfg, jobs)
+    sim.run(3 * 86400.0)
+    assert sim.sched.reconfig_count > 0
+    assert sim.stats["starvations"] == 0
+    assert all(j.state == "running" for j in sim.jobs.values())
+    assert sim.fleet_summary()["min_goodput"] > 0.9
+
+
+def test_fail_host_maps_to_owning_cube():
+    """Host-granular failures (the paper's primary hazard) map out the
+    whole cube the host serves."""
+    from repro.core.ocs import OCSPodScheduler
+    sched = OCSPodScheduler(total_cubes=4)
+    sched.allocate("j", 128)  # cubes 0, 1
+    cube, impacted = sched.fail_host(20)  # 16 hosts/cube -> cube 1
+    assert (cube, impacted) == (1, "j")
+    cube, impacted = sched.fail_host(3 * 16 + 5)  # idle cube 3
+    assert (cube, impacted) == (3, None)
+    with pytest.raises(ValueError):
+        sched.fail_host(4 * 16)
+
+
+def test_starvation_queues_and_resumes():
+    """With zero spares, the first failure starves the job; the repair
+    re-admits it with a restore + rework charge."""
+    cfg = FleetConfig(tpu="tpu_v4", total_cubes=2,
+                      host_mtbf_hours=None, repair_hours=1.0)
+    job = JobSpec(name="j", chips=128, total_steps=10_000, step_time_s=1.0,
+                  checkpoint_every_steps=100, failure_steps=((250, 0),))
+    sim = FleetSimulator(cfg, [job])
+    sim.run(20_000.0)
+    jr = sim.jobs["j"]
+    assert sim.stats["starvations"] == 1
+    assert jr.state == "done"
+    kinds = [k for k, _ in jr.ledger.structure()]
+    assert "detect" in kinds and "restore" in kinds and "idle" in kinds
+    t = jr.ledger.totals()
+    # queued from the end of detection until the repair: no overlap
+    assert t["idle"] == pytest.approx(3600.0 - sim.cfg.detect_s)
+    assert t["rework"] == pytest.approx(50.0)  # 250 - ckpt@200
+    # wall-clock conservation: the ledger partitions exactly the span
+    # from arrival to completion, with nothing double-charged
+    assert jr.ledger.total_seconds == pytest.approx(jr.completed_at)
+
+
+def test_sdc_starvation_charges_restore_once():
+    """Regression: an SDC rollback that starves (no spares) must charge
+    detect at the event and restore+rework exactly once, at
+    re-admission — and the ledger must still partition wall time."""
+    cfg = FleetConfig(tpu="tpu_v4", total_cubes=2, host_mtbf_hours=None,
+                      repair_hours=0.5,
+                      sdc=SDCRateModel(rate_per_chip_hour=0.05,
+                                       screen_interval_s=300.0,
+                                       screen_coverage=1.0),
+                      seed=4)
+    job = JobSpec(name="j", chips=128, total_steps=30_000, step_time_s=1.0,
+                  checkpoint_every_steps=100)
+    sim = FleetSimulator(cfg, [job])
+    sim.run(200_000.0)
+    jr = sim.jobs["j"]
+    assert sim.stats["sdc_detections"] >= 1
+    assert sim.stats["starvations"] == sim.stats["sdc_detections"]
+    restores = [e for e in jr.ledger.events if e.kind == "restore"]
+    assert len(restores) == sim.stats["sdc_detections"]
+    if jr.state == "done":
+        assert jr.ledger.total_seconds == pytest.approx(jr.completed_at)
+
+
+def test_sdc_rolls_back_past_poisoned_checkpoints():
+    """A corruption detected late must rework back to the last snapshot
+    BEFORE the corruption, not merely the last snapshot."""
+    cfg = FleetConfig(tpu="ironwood", total_cubes=4, host_mtbf_hours=None,
+                      sdc=SDCRateModel(rate_per_chip_hour=0.5,
+                                       screen_interval_s=400.0,
+                                       screen_coverage=0.5),
+                      seed=11)
+    job = JobSpec(name="j", chips=128, total_steps=100_000,
+                  step_time_s=1.0, checkpoint_every_steps=100)
+    sim = FleetSimulator(cfg, [job])
+    sim.run(50_000.0)
+    assert sim.stats["sdc_detections"] >= 1
+    jr = sim.jobs["j"]
+    reworks = [e for e in jr.ledger.events if e.kind == "rework"]
+    assert reworks, "sdc detection must charge rework"
+    # at least one rollback crossed a checkpoint boundary (rework longer
+    # than one full interval means a later snapshot was poisoned)
+    assert any(e.steps > 100 for e in reworks)
+
+
+def test_contiguous_pod_fares_worse_than_ocs():
+    """Same fleet, same seed: pre-OCS (contiguous, no substitution)
+    scheduling loses more goodput than the OCS pod — the paper's
+    resilience argument, measured."""
+
+    def run(contiguous):
+        cfg = FleetConfig(tpu="tpu_v4", total_cubes=27,
+                          host_mtbf_hours=300.0, repair_hours=2.0,
+                          contiguous=contiguous, seed=5)
+        jobs = [JobSpec(name=f"j{i}", chips=256, total_steps=10**9,
+                        step_time_s=1.0, checkpoint_every_steps=300)
+                for i in range(4)]
+        sim = FleetSimulator(cfg, jobs)
+        sim.run(2 * 86400.0)
+        return sim
+
+    ocs, contig = run(False), run(True)
+    assert ocs.fleet_summary()["mean_goodput"] > \
+        contig.fleet_summary()["mean_goodput"]
+    assert contig.stats["starvations"] > 0  # no substitution pre-OCS
+    assert ocs.sched.reconfig_count > 0
+
+
+def test_sdc_survives_failstop_restore_from_poisoned_ckpt():
+    """Regression: a fail-stop failure between a corruption and its
+    detection restores from a snapshot that may postdate the corruption;
+    the corruption then survives the restore and its detection must be
+    re-armed, not silently dropped."""
+    cfg = FleetConfig(tpu="tpu_v4", total_cubes=8, host_mtbf_hours=None,
+                      detect_s=1.0, restore_s=1.0, reconfig_s=0.0,
+                      sdc=SDCRateModel(rate_per_chip_hour=3600.0 / 64,
+                                       screen_interval_s=5000.0,
+                                       screen_coverage=1.0),
+                      seed=0)
+    # corruption lands within the first ~second of stepping; the planned
+    # fail-stop at step 300 restores from ckpt@200 (poisoned: corruption
+    # happened before it); detection would only fire at ~5000s
+    job = JobSpec(name="j", chips=64, total_steps=20_000, step_time_s=1.0,
+                  checkpoint_every_steps=200,
+                  failure_steps=((300, -1),))
+    sim = FleetSimulator(cfg, [job])
+    sim.run(100_000.0)
+    jr = sim.jobs["j"]
+    assert sim.stats["sdc_corruptions"] >= 1
+    assert sim.stats["sdc_detections"] >= 1, \
+        "corruption must still be detected after the fail-stop restore"
+    assert jr.state == "done"
+    assert jr.ledger.total_seconds == pytest.approx(jr.completed_at)
+
+
+def test_planned_failure_on_foreign_cube_interrupts_owner():
+    """Regression: a plan naming another job's cube must fail the real
+    owner too, not leave it running on a dead cube."""
+    cfg = FleetConfig(tpu="tpu_v4", total_cubes=8, host_mtbf_hours=None)
+    # j0 owns cubes {0,1}, j1 owns {2,3}; j0's plan kills cube 2
+    jobs = [JobSpec(name="j0", chips=128, total_steps=1000,
+                    step_time_s=1.0, checkpoint_every_steps=100,
+                    failure_steps=((500, 2),)),
+            JobSpec(name="j1", chips=128, total_steps=1000,
+                    step_time_s=1.0, checkpoint_every_steps=100)]
+    sim = FleetSimulator(cfg, jobs)
+    sim.run(10_000.0)
+    assert sim.jobs["j0"].state == "done"
+    assert sim.jobs["j1"].state == "done"
+    # both jobs observed the failure: the owner via impact, the planner
+    # via driver semantics
+    for name in ("j0", "j1"):
+        kinds = [k for k, _ in sim.jobs[name].ledger.structure()]
+        assert "detect" in kinds and "restore" in kinds
+    assert sim.sched.reconfig_count == 1  # only the owner resubstitutes
+    assert 2 in sim.sched.failed_cubes  # repair (4 h) is past the horizon
+
+
+def test_bridge_horizon_covers_dense_failure_plans():
+    """Regression: 3 failures with checkpoint_every > total_steps rework
+    nearly the whole history each time; the sim horizon must cover it."""
+    led = simulate_trainer_plan(total_steps=18, checkpoint_every=100,
+                                failures={15: 0, 16: 1, 17: 2})
+    assert led.effective_steps == 18
+    rework = sum(s for k, s in led.structure() if k == "rework")
+    assert rework == 15 + 16 + 17  # restore always from the bootstrap
+
+
+# ------------------------------------------------------- checkpoint policy
+
+
+def test_checkpoint_interval_search_matches_young_daly():
+    mtbf_h, write_s = 6.0, 30.0
+    yd = optimal_checkpoint_interval_s(mtbf_h * 3600.0, write_s)
+    best_t, best_g = search_checkpoint_interval(
+        mtbf_hours=mtbf_h, detect_s=0.0, restore_s=0.0,
+        checkpoint_write_s=write_s)
+    assert best_t == pytest.approx(yd, rel=0.15)
+    assert 0.0 < best_g < 1.0
+    # the searched optimum beats a clearly-off interval
+    off = modeled_goodput(mtbf_hours=mtbf_h, detect_s=0.0, restore_s=0.0,
+                          checkpoint_interval_s=yd * 20,
+                          checkpoint_write_s=write_s)
+    assert best_g > off
+
+
+# ------------------------------------------------------------ power/carbon
+
+
+def test_sustainability_ratio_matches_paper():
+    r = sustainability_ratios()
+    # anchored-TDP derivation must land on the paper's ~29.3x perf/Watt
+    assert r["joules_per_flop_improvement_x"] == \
+        pytest.approx(r["paper_perf_per_watt_x"], rel=0.02)
+    assert r["co2e_per_flop_improvement_x"] == \
+        r["joules_per_flop_improvement_x"]
+    table = generation_efficiency_table()
+    names = [s.name for s in hwspec.GENERATIONS]
+    vals = [table[n] for n in names]
+    assert vals == sorted(vals, reverse=True), \
+        "J/FLOP must improve monotonically v2 -> Ironwood"
+
+
+def test_power_model_integrates_ledger():
+    led = GoodputLedger()
+    led.record_steps(3600.0, steps=1800)
+    led.record_restore(3600.0)
+    pm = PowerModel(hwspec.get("ironwood"), mfu=0.5,
+                    idle_power_fraction=0.2)
+    s = pm.job_summary(led, chips=256)
+    chip_w = hwspec.chip_tdp_watts(hwspec.get("ironwood"))
+    assert s["energy_j"] == pytest.approx(
+        256 * chip_w * 3600.0 * (1.0 + 0.2))
+    assert s["effective_eflops"] == pytest.approx(
+        3600.0 * 256 * hwspec.get("ironwood").peak_tflops * 1e12 * 0.5
+        / 1e18)
+    assert s["gco2e_total"] > s["gco2e_operational"] > 0.0
+
+
+def test_tdp_anchor_reproduces_relative_row():
+    v2 = hwspec.pod_tdp_watts(hwspec.TPU_V2)
+    iw = hwspec.pod_tdp_watts(hwspec.IRONWOOD)
+    assert v2 == pytest.approx(256 * 280.0)
+    assert iw / v2 == pytest.approx(hwspec.IRONWOOD.rel_pod_tdp)
+    assert hwspec.pod_tdp_watts(hwspec.TPU_V5E) is None
+
+
+# ------------------------------------------------------------------- trace
+
+
+def test_chrome_trace_export(tmp_path):
+    cfg = FleetConfig(tpu="tpu_v4", total_cubes=8, host_mtbf_hours=100.0,
+                      seed=2)
+    sim = FleetSimulator(cfg, [JobSpec(name="j", chips=256,
+                                       total_steps=5000, step_time_s=1.0,
+                                       checkpoint_every_steps=500)])
+    sim.run(20_000.0)
+    path = tmp_path / "trace.json"
+    sim.trace.write(str(path))
+    doc = json.loads(path.read_text())
+    evs = doc["traceEvents"]
+    assert all({"ph", "pid", "name"} <= set(e) for e in evs)
+    phases = {e["name"] for e in evs if e["ph"] == "X"}
+    assert "train" in phases
+    insts = {e["name"] for e in evs if e["ph"] == "i"}
+    assert {"cube_fail", "ocs_reconfig"} & insts
+    # X events carry microsecond ts/dur
+    xs = [e for e in evs if e["ph"] == "X"]
+    assert all(e["dur"] > 0 for e in xs)
+
+
+# ------------------------------------------------------------------ bridge
+
+
+def test_bridge_sim_matches_resilient_trainer():
+    """The acceptance pin: a real ResilientTrainer run and the simulator,
+    driven by the same failure plan, produce the same goodput-ledger
+    structure event-for-event."""
+    from repro.fleet import run_bridge
+    out = run_bridge(steps=18, checkpoint_every=6, failures={9: 0, 14: 1})
+    assert out["match"], (out["real_structure"], out["sim_structure"])
+    assert out["effective_steps"] == 18
+    assert out["replay_summary"]["replayed_steps"] == 5  # 3 + 2
+    assert 0.0 < out["sim_goodput"] <= 1.0
+    assert 0.0 < out["real_goodput"] <= 1.0

@@ -201,6 +201,149 @@ def test_decode_attention_kernel_per_request_pos():
                                rtol=1e-4, atol=1e-4)
 
 
+# --------------------------------------- engine decode via Pallas kernel
+
+
+def test_engine_decode_through_pallas_paged_kernel(qwen):
+    """attn_impl='pallas_interpret' must route the engine's paged decode
+    through the scalar-prefetch Pallas kernel (no gather oracle) and
+    reproduce the oracle's greedy tokens exactly."""
+    cfg, params = qwen
+    ctxp = ModelContext(compute_dtype=jnp.float32, q_chunk=64,
+                        attn_impl="pallas_interpret")
+    rng = np.random.default_rng(11)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (2, 10)), jnp.int32)}
+    kern = ServeEngine(cfg, ctxp, window=40, max_batch=2, chunk=4,
+                       page_size=8)
+    orac = ServeEngine(cfg, CTX, window=40, max_batch=2, chunk=4,
+                       page_size=8)
+    assert kern.paged and orac.paged
+    ok = kern.generate(params, batch, max_new=8)
+    oo = orac.generate(params, batch, max_new=8)
+    np.testing.assert_array_equal(np.asarray(ok), np.asarray(oo))
+
+
+def test_engine_pallas_int8_pages_fall_back_to_oracle(qwen):
+    """int8 pages need the dequant path: the kernel route must not crash
+    or change results when cache_dtype is int8."""
+    cfg, params = qwen
+    ctx8p = ModelContext(compute_dtype=jnp.float32, q_chunk=64,
+                         decode_cache_dtype=jnp.int8,
+                         attn_impl="pallas_interpret")
+    ctx8 = ModelContext(compute_dtype=jnp.float32, q_chunk=64,
+                        decode_cache_dtype=jnp.int8)
+    rng = np.random.default_rng(12)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (2, 10)), jnp.int32)}
+    a = ServeEngine(cfg, ctx8p, window=40, max_batch=2, chunk=4,
+                    page_size=8).generate(params, batch, max_new=6)
+    b = ServeEngine(cfg, ctx8, window=40, max_batch=2, chunk=4,
+                    page_size=8).generate(params, batch, max_new=6)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------- SWA page freeing (paged KV)
+
+
+def test_sliding_window_frees_pages_behind_window():
+    """SWA archs (mixtral) must return pages behind the window to the
+    pool mid-decode while keeping per-token parity with the dense ring
+    oracle (the mask already bounded attention; now memory too)."""
+    cfg = get_smoke("mixtral_8x22b")
+    assert cfg.sliding_window is not None
+    params = init_params(jax.random.key(0), api.model_specs(cfg))
+    eng = ServeEngine(cfg, CTX, window=48, max_batch=2, chunk=4,
+                      page_size=4)
+    assert eng.paged
+    rng = np.random.default_rng(13)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (2, 6)), jnp.int32)}
+    out = eng.generate(params, batch, max_new=30)
+    assert eng.counters["pages_trimmed"] > 0
+    ref = eng.generate_pertoken(params, batch, max_new=30)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_paged_trim_grow_bookkeeping():
+    """Unit-level: trim releases whole pages behind the floor, keeps the
+    frontier monotonic, and release() reclaims everything."""
+    from repro.serve.kv_cache import PagedKVCache
+    cfg = get_smoke("qwen2_0_5b")
+    kv = PagedKVCache(cfg, CTX, num_pages=16, page_size=4, max_batch=2,
+                      max_pages_per_seq=8)
+    assert kv.grow(0, 20)  # 5 pages
+    n_free = kv.free_page_count()
+    assert kv.trim(0, 9) == 2  # pages for tokens 0..7 freed
+    assert kv.free_page_count() == n_free + 2
+    assert kv.slot_pages(0) == [int(p) for p in kv._table[0] if p != 0]
+    # grow continues from the frontier, never refilling trimmed history
+    assert kv.grow(0, 28)  # 7 pages total frontier
+    assert int(kv._frontier[0]) == 7
+    assert all(int(kv._table[0][i]) == 0 for i in range(2))
+    kv.release(0)
+    assert kv.free_page_count() == 15  # all but trash page 0
+    assert int(kv._frontier[0]) == 0
+
+
+# ------------------------------------- state-family prefill bucketing
+
+
+def test_state_family_prefill_buckets_to_pow2():
+    """rwkv6 prompts of different lengths share one power-of-two prefill
+    compilation and match the per-token oracle exactly."""
+    cfg = get_smoke("rwkv6_1_6b")
+    params = init_params(jax.random.key(0), api.model_specs(cfg))
+    eng = ServeEngine(cfg, CTX, window=32, max_batch=2, chunk=4)
+    assert eng.bucket_prefill
+    rng = np.random.default_rng(14)
+    prompts_ = [rng.integers(0, cfg.vocab_size, n) for n in (9, 11, 13, 15)]
+    reqs = [Request(rid=i, prompt=p, max_new=6)
+            for i, p in enumerate(prompts_)]
+    out = eng.run(params, reqs)
+    assert eng.prefill_bucket_sizes == {16}
+    for i, p in enumerate(prompts_):
+        ref = eng.generate_pertoken(
+            params, {"tokens": jnp.asarray(p[None, :])}, max_new=6)
+        np.testing.assert_array_equal(out[i], np.asarray(ref)[0])
+
+
+def test_attention_stacks_do_not_bucket(qwen):
+    cfg, _ = qwen
+    eng = ServeEngine(cfg, CTX, window=48, max_batch=2, chunk=4,
+                      paged=False)
+    assert not eng.bucket_prefill  # front padding would shift positions
+
+
+def test_mamba_front_pad_mask_keeps_state_exact():
+    """Direct check of the masked-conv property: a front-padded mamba
+    prefill reproduces the unpadded output and final state."""
+    from repro.models.mamba import mamba_forward, mamba_param_specs
+    cfg = get_smoke("jamba_v01_52b")
+    specs = mamba_param_specs(cfg)
+    params = init_params(jax.random.key(1), specs)
+    # nonzero conv bias is exactly the term the mask neutralizes
+    params["conv_b"] = jax.random.normal(
+        jax.random.key(2), params["conv_b"].shape) * 0.3
+    x = jax.random.normal(jax.random.key(3), (2, 6, cfg.d_model),
+                          jnp.float32)
+    out, (conv, ssm) = mamba_forward(params, x, cfg, jnp.float32,
+                                     chunk=2, return_state=True)
+    pad = 2
+    xp = jnp.concatenate([jnp.zeros((2, pad, cfg.d_model)), x], axis=1)
+    mask = (jnp.arange(6 + pad)[None, :] >= pad).astype(jnp.float32)
+    mask = jnp.broadcast_to(mask, (2, 6 + pad))
+    outp, (convp, ssmp) = mamba_forward(params, xp, cfg, jnp.float32,
+                                        chunk=2, return_state=True,
+                                        seq_mask=mask)
+    np.testing.assert_allclose(np.asarray(outp[:, pad:]), np.asarray(out),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(convp), np.asarray(conv),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ssmp), np.asarray(ssm),
+                               rtol=1e-5, atol=1e-5)
+
+
 # ------------------------------------------------------ host-sync count
 
 

@@ -1,10 +1,13 @@
 # Convenience entry points. `make test` is the tier-1 gate from ROADMAP.md.
 
 .PHONY: test test-serve test-fleet bench-serve bench-fleet serve-demo \
-	fleet-demo
+	fleet-demo docs-check
 
 test:
 	./scripts/tier1.sh
+
+docs-check:
+	python scripts/docs_check.py
 
 test-serve:
 	./scripts/tier1.sh tests/test_serve.py

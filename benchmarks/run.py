@@ -28,7 +28,9 @@ SUITES = {
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        epilog="Per-suite paper anchors and expected output shapes are "
+               "documented in docs/benchmarks.md.")
     ap.add_argument("--only", default=None,
                     help="comma-separated suite names")
     args = ap.parse_args()

@@ -1,0 +1,87 @@
+#!/usr/bin/env python
+"""Docs coverage / link check (``make docs-check``).
+
+Verifies that the documentation keeps up with the code:
+
+  1. every package directory under ``src/repro/`` is mentioned by name
+     somewhere in README.md or docs/*.md;
+  2. every relative link and bare file reference in README.md and
+     docs/*.md resolves to a real file in the repo;
+  3. every ``benchmarks/bench_*.py`` entry point is documented in
+     docs/benchmarks.md.
+
+Exits non-zero with a report on failure. Wired into scripts/tier1.sh as
+a non-fatal step (docs drift should nag, not block the test gate).
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def doc_files():
+    files = [ROOT / "README.md"]
+    files += sorted((ROOT / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def main() -> int:
+    problems = []
+    docs = doc_files()
+    if not (ROOT / "README.md").exists():
+        problems.append("README.md is missing")
+    if not (ROOT / "docs").is_dir():
+        problems.append("docs/ directory is missing")
+    corpus = "\n".join(f.read_text() for f in docs)
+
+    # 1) every src/repro/* package is mentioned somewhere in the docs
+    for pkg in sorted((ROOT / "src" / "repro").iterdir()):
+        if not pkg.is_dir() or pkg.name.startswith("__"):
+            continue
+        if pkg.name not in corpus:
+            problems.append(
+                f"package src/repro/{pkg.name}/ is not mentioned in "
+                f"README.md or docs/")
+
+    # 2) markdown links + bare path references resolve
+    path_re = re.compile(
+        r"\]\(([^)]+?)\)"                     # [text](target[#anchor])
+        r"|`((?:src|docs|benchmarks|scripts|tests|examples)"
+        r"/[\w./-]+?)(?:::[\w.]+)?`")         # `path/to/file.py::anchor`
+    for f in docs:
+        for m in path_re.finditer(f.read_text()):
+            target = (m.group(1) or m.group(2)).split("#", 1)[0]
+            if not target or target.startswith(
+                    ("http://", "https://", "mailto:")):
+                continue
+            resolved = (f.parent / target).resolve()
+            alt = (ROOT / target).resolve()
+            if not resolved.exists() and not alt.exists():
+                problems.append(f"{f.relative_to(ROOT)}: broken link "
+                                f"-> {target}")
+
+    # 3) every benchmark entry point is documented
+    bench_doc = ROOT / "docs" / "benchmarks.md"
+    bench_text = bench_doc.read_text() if bench_doc.exists() else ""
+    for bench in sorted((ROOT / "benchmarks").glob("bench_*.py")):
+        if bench.name not in bench_text:
+            problems.append(
+                f"benchmarks/{bench.name} is not documented in "
+                f"docs/benchmarks.md")
+
+    if problems:
+        print("docs-check FAILED:")
+        for p in problems:
+            print(f"  - {p}")
+        return 1
+    print(f"docs-check OK: {len(docs)} docs, all packages mentioned, "
+          f"all links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -180,6 +180,113 @@ def _paged_decode_kernel(pos_ref, table_ref, q_ref, k_ref, v_ref, o_ref,
             o_ref.dtype)
 
 
+def _paged_span_kernel(pos_ref, table_ref, q_ref, k_ref, v_ref, o_ref,
+                       m_ref, l_ref, acc_ref, *,
+                       page_size: int, n_pages: int,
+                       window: Optional[int], scale: float, groups: int):
+    """k-token-query variant of ``_paged_decode_kernel``.
+
+    The query block carries ``span`` consecutive tokens of one sequence
+    (speculative draft-verify, or a suffix prefill behind a cached
+    prefix). Query t sits at absolute position ``pos + t`` and is masked
+    causally against the streamed pages — the online-softmax state gains
+    a span axis, everything else is the one-pass page stream."""
+    ib, ij = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(ij == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[ib]
+    q = q_ref[0].astype(jnp.float32) * scale  # (T, H, d)
+    k = k_ref[0].astype(jnp.float32)          # (P, KV, d)
+    p, kv, d = k.shape
+    t, h = q.shape[0], q.shape[1]
+    qg = q.reshape(t, kv, groups, d)
+    # batch over KV heads, contract d: (KV, T, groups, P) in one dot
+    scores = jax.lax.dot_general(
+        qg, k, (((3,), (2,)), ((1,), (1,))),
+        preferred_element_type=jnp.float32)
+
+    # pages are append-only: absolute position == global slot. Query t
+    # (position pos + t) sees positions <= its own.
+    t_iota = jax.lax.broadcasted_iota(jnp.int32, (1, t, 1, p), 1)
+    abs_pos = ij * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, t, 1, p), 3)
+    qpos = pos + t_iota
+    valid = abs_pos <= qpos
+    if window is not None:
+        valid &= abs_pos > qpos - window
+    scores = jnp.where(valid, scores, NEG_INF)
+
+    m_prev = m_ref[...]  # (KV, T, groups)
+    m_new = jnp.maximum(m_prev, scores.max(axis=-1))
+    pr = jnp.exp(scores - m_new[..., None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + pr.sum(axis=-1)
+    v_f = v_ref[0].astype(jnp.float32)  # (P, KV, d)
+    pv = jax.lax.dot_general(
+        pr, v_f, (((3,), (0,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32)  # (KV, T, groups, d)
+    acc_ref[...] = acc_ref[...] * corr[..., None] + pv
+    m_ref[...] = m_new
+
+    @pl.when(ij == n_pages - 1)
+    def _store():
+        denom = jnp.maximum(l_ref[...], 1e-30)[..., None]
+        out = jnp.swapaxes(acc_ref[...] / denom, 0, 1)  # (T, KV, groups, d)
+        o_ref[0, ...] = out.reshape(t, h, d).astype(o_ref.dtype)
+
+
+def paged_decode_span_attention(
+    q: Array, k_pages: Array, v_pages: Array, page_table: Array,
+    pos: Array, *,
+    window: Optional[int] = None,
+    interpret: bool = False,
+) -> Array:
+    """q: (B, T, H, D) — T consecutive query tokens per sequence at
+    absolute positions ``pos .. pos + T - 1`` (the span's own k/v must
+    already be written to the pages). Other args as
+    ``paged_decode_attention``. Returns (B, T, H, D)."""
+    b, t, h, d = q.shape
+    n, p, kv, _ = k_pages.shape
+    m = page_table.shape[1]
+    groups = h // kv
+    grid = (b, m)
+    scale = d ** -0.5
+    return pl.pallas_call(
+        functools.partial(
+            _paged_span_kernel, page_size=p, n_pages=m,
+            window=window, scale=scale, groups=groups),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, t, h, d),
+                             lambda i, j, pos_ref, tab_ref: (i, 0, 0, 0)),
+                pl.BlockSpec((1, p, kv, d),
+                             lambda i, j, pos_ref, tab_ref:
+                             (tab_ref[i, j], 0, 0, 0)),
+                pl.BlockSpec((1, p, kv, d),
+                             lambda i, j, pos_ref, tab_ref:
+                             (tab_ref[i, j], 0, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, t, h, d),
+                                   lambda i, j, pos_ref, tab_ref:
+                                   (i, 0, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((kv, t, groups), jnp.float32),
+                pltpu.VMEM((kv, t, groups), jnp.float32),
+                pltpu.VMEM((kv, t, groups, d), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, t, h, d), q.dtype),
+        interpret=interpret,
+    )(pos, page_table, q, k_pages, v_pages)
+
+
 def paged_decode_attention(
     q: Array, k_pages: Array, v_pages: Array, page_table: Array,
     pos: Array, *,

@@ -17,6 +17,8 @@ from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention as _decode_pl
 from repro.kernels.decode_attention import \
     paged_decode_attention as _paged_decode_pl
+from repro.kernels.decode_attention import \
+    paged_decode_span_attention as _paged_span_pl
 from repro.kernels.flash_attention import flash_attention as _flash_pl
 from repro.kernels.matmul import matmul as _matmul_pl
 from repro.kernels.rwkv_scan import rwkv_wkv as _wkv_pl
@@ -80,6 +82,25 @@ def paged_decode_attention(q: Array, k_pages: Array, v_pages: Array,
         return ref.decode_attention_ref(q, kg, vg, pos, window=window)
     return _paged_decode_pl(q, k_pages, v_pages, page_table, pos,
                             window=window, interpret=impl == "interpret")
+
+
+@partial(jax.jit, static_argnames=("impl", "window"))
+def paged_decode_span_attention(q: Array, k_pages: Array, v_pages: Array,
+                                page_table: Array, pos: Array, *,
+                                impl: str = "pallas",
+                                window: Optional[int] = None) -> Array:
+    """k-token-query paged decode. q: (B,T,H,D) — T consecutive tokens
+    per sequence at absolute positions ``pos .. pos+T-1`` (speculative
+    verify / suffix prefill); pages (N,P,KV,D); page_table (B,M);
+    pos (B,) valid count BEFORE the span. Returns (B,T,H,D)."""
+    if impl == "ref":
+        n, p, kv, d = k_pages.shape
+        b, m = page_table.shape
+        kg = k_pages[page_table].reshape(b, m * p, kv, d)
+        vg = v_pages[page_table].reshape(b, m * p, kv, d)
+        return ref.decode_span_attention_ref(q, kg, vg, pos, window=window)
+    return _paged_span_pl(q, k_pages, v_pages, page_table, pos,
+                          window=window, interpret=impl == "interpret")
 
 
 @partial(jax.jit, static_argnames=("impl", "chunk"))

@@ -59,6 +59,32 @@ def decode_attention_ref(q: Array, k_cache: Array, v_cache: Array,
     return out.astype(q.dtype)
 
 
+def decode_span_attention_ref(q: Array, k_cache: Array, v_cache: Array,
+                              pos: Array, *,
+                              window: Optional[int] = None) -> Array:
+    """T-query decode oracle against an append-only (non-ring) cache.
+
+    q: (B,T,H,D); caches (B,S,KV,D) at absolute slots; pos: (B,) valid
+    token count BEFORE the span — query t sits at position pos + t and
+    sees slots <= its own position. Returns (B,T,H,D)."""
+    b, t, h, d = q.shape
+    _, s, kv, _ = k_cache.shape
+    groups = h // kv
+    qpos = pos[:, None] + jnp.arange(t)[None, :]  # (B, T)
+    spos = jnp.arange(s)[None, None, :]
+    valid = spos <= qpos[..., None]  # (B, T, S)
+    if window is not None:
+        valid &= spos > qpos[..., None] - window
+    kf = jnp.repeat(k_cache, groups, axis=2).astype(jnp.float32)
+    vf = jnp.repeat(v_cache, groups, axis=2).astype(jnp.float32)
+    scores = jnp.einsum("bthd,bshd->bhts", q.astype(jnp.float32), kf)
+    scores = scores * (d ** -0.5)
+    scores = jnp.where(valid[:, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhts,bshd->bthd", probs, vf)
+    return out.astype(q.dtype)
+
+
 def rwkv_wkv_ref(r: Array, k: Array, v: Array, logw: Array,
                  u: Array) -> Array:
     """Token-serial recurrence (the definitional oracle).

@@ -61,6 +61,10 @@ def main() -> None:
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--trace", type=int, default=0,
                     help="serve N trace requests via continuous batching")
+    ap.add_argument("--draft-k", type=int, default=0,
+                    help="self-speculative draft length (paged archs)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable prompt-prefix page sharing")
     ap.add_argument("--quantize", choices=["none", "int8", "fp8"],
                     default="none")
     ap.add_argument("--kv-int8", action="store_true",
@@ -81,9 +85,12 @@ def main() -> None:
         params = quantize_weights(params, jnp.int8)  # storage demo only
 
     window = args.prompt_len + args.max_new
+    paged = api.supports_paged_decode(cfg)
     engine = ServeEngine(cfg, ctx, window=window, max_batch=args.max_batch,
                          chunk=args.chunk, page_size=args.page_size,
-                         temperature=args.temperature)
+                         temperature=args.temperature,
+                         draft_k=args.draft_k if paged else 0,
+                         prefix_cache=(paged and not args.no_prefix_cache))
     mode = "paged" if engine.paged else "dense"
     rng = np.random.default_rng(args.seed)
 
@@ -104,6 +111,10 @@ def main() -> None:
               f"{wall:.2f}s ({toks / wall:.1f} tok/s)")
         print(f"occupancy={s.mean_occupancy:.2f} stats={s.stats} "
               f"counters={engine.counters}")
+        if engine.paged:
+            print(f"prefix_hit_rate={engine.prefix_hit_rate:.2f} "
+                  f"acceptance_length={engine.acceptance_length:.2f} "
+                  f"kv={engine.kv.counters}")
         return
 
     batch = {"tokens": jnp.asarray(

@@ -82,6 +82,19 @@ def decode_paged_fn(params, token, state, cfg: ModelConfig,
     return lm.lm_decode_step_paged(params, token, state, cfg, ctx)
 
 
+def decode_span_paged_fn(params, tokens, state, cfg: ModelConfig,
+                         ctx: ModelContext, valid=None):
+    """T-token span decode against the paged pool: one batched paged-
+    attention call scores T consecutive tokens per request (speculative
+    draft-verify; suffix prefill behind a cached prefix). ``pos`` in the
+    returned state is unchanged — the caller owns acceptance/rollback
+    (see lm.lm_decode_span_paged)."""
+    if not supports_paged_decode(cfg):
+        raise ValueError(f"{cfg.name}: no paged decode for this family")
+    return lm.lm_decode_span_paged(params, tokens, state, cfg, ctx,
+                                   valid=valid)
+
+
 def train_batch_specs(cfg: ModelConfig, batch: int,
                       seq: int) -> Dict[str, jax.ShapeDtypeStruct]:
     specs = {

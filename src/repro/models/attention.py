@@ -144,6 +144,32 @@ def full_attention(
     return out.transpose(1, 0, 2, 3, 4).reshape(b, s, h, d)
 
 
+def decode_span_attention(
+    q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+    cache_pos: jax.Array, cfg: ModelConfig,
+    *,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """T-token span attention against an append-only (non-ring) cache.
+
+    q: (B,T,H,D) — T consecutive tokens of one request (a speculative
+    draft-verify span, or a suffix prefill behind a cached prefix);
+    caches: (B,S,KV,D) at absolute slots (the paged gather view).
+    cache_pos: (B,) valid token count BEFORE the span; the span's own
+    k/v must already be written, query t (absolute position
+    cache_pos + t) attends causally through its own position."""
+    b, s, kv, d = k_cache.shape
+    t = q.shape[1]
+    win = window if window is not None else cfg.sliding_window
+    qpos = cache_pos[:, None] + jnp.arange(t)[None, :]  # (B, T)
+    spos = jnp.arange(s)[None, None, :]
+    valid = spos <= qpos[..., None]  # (B, T, S)
+    if win is not None:
+        valid &= spos > qpos[..., None] - win
+    bias = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+    return _sdpa(q, k_cache, v_cache, bias)
+
+
 def decode_attention(
     q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     cache_pos: jax.Array, cfg: ModelConfig,

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.attention import (apply_positional, decode_attention,
-                                    full_attention)
+                                    decode_span_attention, full_attention)
 from repro.models.config import ModelConfig
 from repro.models.mamba import (mamba_decode_step, mamba_forward,
                                 mamba_param_specs)
@@ -530,4 +530,74 @@ def block_decode_paged(block_params, x, pages, page_table, pos, cfg, ctx):
         x, new_pages[f"sl{i}"] = sublayer_decode_paged(
             block_params[f"sl{i}"], x, pages[f"sl{i}"], page_table, pos,
             cfg, ctx, i)
+    return x, new_pages
+
+
+# -- paged span decode: T consecutive tokens in one batched call ------------
+#
+# The datapath behind speculative decoding and prefix-cache suffix prefill:
+# a span of T tokens per request is scored in ONE paged-attention call —
+# the span's k/v are scattered into the pages first (append-only), then
+# query t attends causally through absolute position pos + t. Rolling back
+# rejected draft tokens is just a position rewind: their k/v stay in the
+# pool as garbage beyond the validity frontier and are overwritten before
+# the frontier ever reaches them (the paper's hardware-replay framing —
+# a deterministic datapath plus a replayable frontier beats bespoke undo).
+
+
+def sublayer_decode_span_paged(p, x, pages, page_table, pos, live,
+                               cfg: ModelConfig, ctx: ModelContext, idx):
+    """T-token span decode against the paged pool.
+
+    x: (B,T,D) at absolute positions ``pos .. pos+T-1``; live: (B,T)
+    bool — False marks padded span slots whose writes are routed to the
+    trash page (suffix prefills pad to a bucketed compile length)."""
+    dtype = ctx.compute_dtype
+    b, t, _ = x.shape
+    page_size = pages["k"].shape[1]
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = _project_qkv(p["core"], h, cfg, dtype)
+    posn = pos[:, None] + jnp.arange(t)[None, :]  # (B, T)
+    q, k = apply_positional(q, k, cfg, posn, None)
+    bidx = jnp.arange(b)[:, None]
+    # page-table reads beyond the row clamp; dead slots write to trash 0
+    pid = jnp.where(live, page_table[bidx, posn // page_size], 0)
+    slot = posn % page_size
+    kq, ks = paged_quantize(k, ctx.cache_dtype)  # (B, T, KV, D)
+    vq, vs = paged_quantize(v, ctx.cache_dtype)
+    new_pages = dict(pages)
+    new_pages["k"] = pages["k"].at[pid, slot].set(kq)
+    new_pages["v"] = pages["v"].at[pid, slot].set(vq)
+    if ks is not None:
+        new_pages["k_scale"] = pages["k_scale"].at[pid, slot].set(ks)
+        new_pages["v_scale"] = pages["v_scale"].at[pid, slot].set(vs)
+    if ctx.attn_impl in ("pallas", "pallas_interpret") and ks is None:
+        from repro.kernels import ops as kops
+        out = kops.paged_decode_span_attention(
+            q, new_pages["k"], new_pages["v"], page_table, pos,
+            impl=("interpret" if ctx.attn_impl == "pallas_interpret"
+                  else "pallas"),
+            window=cfg.sliding_window)
+    else:
+        kg, vg = _paged_gather(new_pages, page_table, dtype)
+        out = decode_span_attention(q, kg, vg, pos, cfg)
+    core = jnp.einsum("bshk,hkd->bsd", out, p["core"]["wo"].astype(dtype))
+    x = x + core
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.sublayer_has_moe(idx):
+        mlp, _ = moe_ffn(p["mlp"], h, cfg, dtype, shard=ctx.shard,
+                         dropless=True)
+    else:
+        mlp = dense_ffn(p["mlp"], h, cfg, dtype)
+    x = x + mlp
+    return x, new_pages
+
+
+def block_decode_span_paged(block_params, x, pages, page_table, pos, live,
+                            cfg, ctx):
+    new_pages = {}
+    for i in range(cfg.block_len):
+        x, new_pages[f"sl{i}"] = sublayer_decode_span_paged(
+            block_params[f"sl{i}"], x, pages[f"sl{i}"], page_table, pos,
+            live, cfg, ctx, i)
     return x, new_pages

@@ -14,7 +14,8 @@ import jax.numpy as jnp
 
 from repro.models.blocks import (ModelContext, block_cache_spec,
                                  block_decode, block_decode_paged,
-                                 block_forward, block_prefill, block_specs,
+                                 block_decode_span_paged, block_forward,
+                                 block_prefill, block_specs,
                                  paged_block_cache_spec, stack_specs)
 from repro.models.config import ModelConfig
 from repro.models.ops import embed_lookup, rms_norm, softmax_cross_entropy
@@ -199,3 +200,39 @@ def lm_decode_step_paged(params: Dict[str, Any], token: Array,
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = _logits(params, x, cfg, ctx)
     return logits, {"pages": new_pages, "page_table": table, "pos": pos + 1}
+
+
+def lm_decode_span_paged(params: Dict[str, Any], tokens: Array,
+                         state: Dict[str, Any], cfg: ModelConfig,
+                         ctx: ModelContext,
+                         valid: Optional[Array] = None
+                         ) -> Tuple[Array, Dict[str, Any]]:
+    """T-token span decode against the paged pool (speculative verify /
+    prefix-cache suffix prefill).
+
+    tokens: (B,T) int32 at absolute positions ``pos .. pos+T-1``;
+    ``valid`` (B,): number of real tokens in the span (default all T) —
+    padded tail slots write to the trash page and their logits are
+    garbage the caller must ignore. Returns (logits (B,T,V), new state
+    with ``pos`` UNCHANGED — acceptance/rollback bookkeeping is the
+    caller's: accepted tokens advance the position frontier, rejected
+    ones are simply never covered by it)."""
+    pos = state["pos"]
+    table = state["page_table"]
+    b, t = tokens.shape
+    if valid is None:
+        valid = jnp.full((b,), t, jnp.int32)
+    live = jnp.arange(t)[None, :] < valid[:, None]  # (B, T)
+    x = embed_lookup(params["embed"], tokens, ctx.compute_dtype)
+    x = ctx.shard(x, ("batch", None, "embed"))
+
+    def body(x, xs):
+        bp, layer_pages = xs
+        x, np_ = block_decode_span_paged(bp, x, layer_pages, table, pos,
+                                         live, cfg, ctx)
+        return x, np_
+
+    x, new_pages = jax.lax.scan(body, x, (params["blocks"], state["pages"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, x, cfg, ctx)
+    return logits, {"pages": new_pages, "page_table": table, "pos": pos}

@@ -1,7 +1,9 @@
 """Continuous-batching serving engine with a device-resident decode loop.
 
 The Ironwood-era premise: serving is a first-class supercomputer workload,
-so the engine is built like one —
+so the engine is built like one — a stable deterministic datapath (the
+paged pool + chunked decode scan) that rapidly-changing workload tricks
+plug into without changing the architecture:
 
   * **Continuous batching** (scheduler.py): requests are admitted into
     free batch slots and drained *mid-decode*; finished or preempted
@@ -11,15 +13,29 @@ so the engine is built like one —
     int8 page quantization as the HBM lever; other families (Mamba/RWKV/
     enc-dec) use per-slot dense ring/state caches behind the same
     interface.
-  * **Device-resident decode** : the hot loop is a ``lax.scan`` of
-    ``chunk`` decode steps compiled once — sample, EOS/budget masking,
-    cache write and position bookkeeping all stay on device. The host
-    syncs once per *chunk* (not per token) to drain emitted tokens and
-    make scheduling decisions.
+  * **Prefix caching** (kv_cache.py): full prompt pages are content-
+    addressed in a global LRU index; admissions that hit share the cached
+    pages by reference (copy-on-write protected) and prefill only the
+    prompt *suffix* via the span-decode path — the system-prompt /
+    few-shot-template traffic shape served at near-zero prefill cost.
+  * **Self-speculative decoding** (``draft_k > 0``): an n-gram prompt-
+    lookup drafter (no second model) proposes ``draft_k`` tokens from a
+    device-resident token history; one batched span decode scores the
+    whole draft, the longest prefix matching the model's own greedy
+    targets is accepted, and rollback of rejected tokens is a pure
+    position rewind — pages are append-only, so un-accepted k/v simply
+    stay beyond the validity frontier until overwritten (the paper's
+    checkpoint-replay framing applied to decode).
+  * **Device-resident decode**: the hot loop is a ``lax.scan`` of
+    ``chunk`` decode steps compiled once — draft, verify, sample,
+    EOS/budget masking, cache write and position bookkeeping all stay on
+    device. The host syncs once per *chunk* (not per token) to drain
+    emitted tokens and make scheduling decisions.
 
 The legacy single-batch ``generate()`` survives as a thin wrapper that
 submits one request per batch row; ``generate_pertoken()`` keeps the old
-one-jit-call-per-token loop as the benchmark baseline.
+one-jit-call-per-token loop as the benchmark baseline. See
+docs/serving.md for lifecycle diagrams of all three subsystems.
 """
 
 from __future__ import annotations
@@ -46,7 +62,11 @@ PAD_TOKEN = -1  # emitted by finished slots inside a chunk
 
 @dataclasses.dataclass
 class ServeEngine:
-    """``window``: max total tokens per request (prompt + generated)."""
+    """``window``: max total tokens per request (prompt + generated).
+
+    ``draft_k``: speculative draft length per decode step (0 disables;
+    requires the paged backend). ``prefix_cache``: share prompt-prefix
+    pages across requests (None -> on whenever paged)."""
 
     cfg: ModelConfig
     ctx: ModelContext
@@ -58,6 +78,8 @@ class ServeEngine:
     paged: Optional[bool] = None  # None -> auto by family
     eos_id: Optional[int] = None
     temperature: float = 0.0
+    draft_k: int = 0
+    prefix_cache: Optional[bool] = None
 
     def __post_init__(self) -> None:
         cfg, ctx = self.cfg, self.ctx
@@ -65,14 +87,28 @@ class ServeEngine:
             self.paged = api.supports_paged_decode(cfg)
         if self.paged and not api.supports_paged_decode(cfg):
             raise ValueError(f"{cfg.name}: paged serving unsupported")
+        if self.draft_k and not self.paged:
+            raise ValueError("speculative decoding (draft_k > 0) requires "
+                             "the paged KV backend")
+        if self.draft_k < 0:
+            raise ValueError("draft_k must be >= 0")
+        if self.prefix_cache is None:
+            self.prefix_cache = self.paged
+        if self.prefix_cache and not self.paged:
+            raise ValueError("prefix caching requires the paged KV backend")
         self.counters = {"prefills": 0, "chunks": 0, "decode_steps": 0,
                          "host_syncs": 0, "pertoken_steps": 0,
-                         "pages_trimmed": 0}
+                         "pages_trimmed": 0, "suffix_prefills": 0,
+                         "prompt_tokens": 0, "cached_prompt_tokens": 0,
+                         "spec_steps": 0, "spec_tokens": 0}
         if self.paged:
             # +1 page of table headroom: a finished slot's frozen pos can
             # sit exactly at `window`, whose page index must still resolve
             # (to the trash page) instead of clamping into a live page.
-            self.pages_per_seq = -(-self.window // self.page_size) + 1
+            # Speculative spans write up to draft_k positions past the
+            # frontier; those slots must resolve (to trash) too.
+            self.pages_per_seq = (
+                -(-(self.window + self.draft_k) // self.page_size) + 1)
             self.prefill_len = self.pages_per_seq * self.page_size
             if self.num_pages is None:
                 self.num_pages = 1 + self.max_batch * self.pages_per_seq
@@ -99,6 +135,8 @@ class ServeEngine:
                                and set(cfg.sublayer_kinds()) <=
                                {"mamba", "rwkv"})
         self.prefill_bucket_sizes: set = set()
+        self.suffix_bucket_sizes: set = set()
+        self._use_spec = False  # per-run: draft_k > 0 and greedy temp
         self._build_jitted()
         self._reset_carry()
 
@@ -125,6 +163,40 @@ class ServeEngine:
         single-fold per-step chunk keys and from other admissions in the
         same boundary."""
         return jax.random.fold_in(jax.random.fold_in(key, 0x9e3779), rid)
+
+    def _draft_tokens(self, hist: Array, pos: Array, tok: Array) -> Array:
+        """n-gram prompt-lookup drafter, fully on device.
+
+        hist: (B, window) token at each absolute position (< pos valid);
+        tok: (B, 1) the current input token (position ``pos``, not yet in
+        hist). Finds the latest earlier occurrence of the tip bigram
+        (hist[pos-1], tok) and proposes the ``draft_k`` tokens that
+        followed it. Misses return -1 (never matches a greedy target, so
+        verification rejects the whole draft). Drafts are *advisory
+        only*: acceptance compares against the model's own greedy
+        targets, so a bad draft can cost speed, never correctness."""
+        b, w = hist.shape
+        dk = self.draft_k
+        bidx = jnp.arange(b)
+        idx = jnp.arange(w)[None, :]
+        prev = jnp.pad(hist, ((0, 0), (1, 0)))[:, :w]  # hist shifted right
+        last = hist[bidx, jnp.clip(pos - 1, 0, w - 1)]  # (B,)
+        m = (hist == tok) & (prev == last[:, None])
+        m &= (idx >= 1) & (idx < pos[:, None])
+        # prefer the latest match whose dk-token continuation is fully
+        # inside known history (j + dk <= pos - 1); matches closer to the
+        # tip would propose positions that are not written yet
+        j_full = jnp.where(m & (idx + dk <= pos[:, None] - 1),
+                           idx, -1).max(axis=1)
+        j_part = jnp.where(m & (idx <= pos[:, None] - 2),
+                           idx, -1).max(axis=1)
+        j = jnp.where(j_full >= 0, j_full, j_part)
+        gidx = jnp.clip(j[:, None] + 1 + jnp.arange(dk)[None, :], 0, w - 1)
+        drafts = hist[bidx[:, None], gidx]
+        # tokens proposed past the known tip are unknown: void them
+        known = j[:, None] + 1 + jnp.arange(dk)[None, :] < pos[:, None]
+        drafts = jnp.where(known & (j[:, None] >= 0), drafts, -1)
+        return drafts.astype(jnp.int32)
 
     def _build_jitted(self) -> None:
         cfg, ctx = self.cfg, self.ctx
@@ -154,6 +226,35 @@ class ServeEngine:
         self._prefill_paged = jax.jit(prefill_paged)
         self._prefill_dense = jax.jit(prefill_dense)
         self._prefill_bucketed = jax.jit(prefill_bucketed)
+
+        # ---- suffix prefill behind a cached prefix ----------------------
+        # The suffix rides the span-decode datapath: its queries attend to
+        # the adopted prefix pages through the page table, its k/v scatter
+        # into the slot's private pages, and only the suffix is computed.
+        def prefill_span(params, pages, span, table, pos0, valid, key,
+                         temp):
+            state = {"pages": pages, "page_table": table, "pos": pos0}
+            logits, new_state = api.decode_span_paged_fn(
+                params, span, state, cfg, ctx, valid=valid)
+            idx = jnp.clip(valid - 1, 0, span.shape[1] - 1)
+            last = jnp.take_along_axis(
+                logits, jnp.broadcast_to(
+                    idx[:, None, None],
+                    (logits.shape[0], 1, logits.shape[2])), axis=1)
+            first = self._pick(last, key, temp)
+            return first, new_state["pages"]
+
+        self._prefill_span = jax.jit(prefill_span, donate_argnums=(1,))
+
+        # ---- copy-on-write page copy (prefix cache fork) ----------------
+        def copy_page(pages, src, dst):
+            new = {}
+            for sl, sub in pages.items():
+                new[sl] = {name: arr.at[:, dst].set(arr[:, src])
+                           for name, arr in sub.items()}
+            return new
+
+        self._copy_page = jax.jit(copy_page, donate_argnums=(0,))
 
         # ---- paged page write -------------------------------------------
         from repro.models.blocks import paged_quantize
@@ -227,6 +328,82 @@ class ServeEngine:
 
         self._run_chunk = jax.jit(run_chunk, donate_argnums=(10,))
 
+        # ---- speculative decode chunk (draft_k > 0) ---------------------
+        # One scan step = draft -> one span decode scoring (1 + draft_k)
+        # tokens -> accept the longest prefix matching the model's own
+        # greedy targets -> emit 1..1+draft_k tokens. Rollback of the
+        # rejected tail is the position bookkeeping alone: its k/v stay
+        # in append-only pages beyond the validity frontier and are
+        # rewritten before the frontier reaches them.
+        dk = self.draft_k
+
+        def spec_chunk_body(params, table, temp, carry, i):
+            tok, pos, done, n_out, max_new, key, cache, hist = carry
+            b = tok.shape[0]
+            bidx = jnp.arange(b)
+            w = hist.shape[1]
+            drafts = self._draft_tokens(hist, pos, tok)  # (B, dk)
+            span = jnp.concatenate([tok, drafts], axis=1)  # (B, 1+dk)
+            state = {"pages": cache, "page_table": table, "pos": pos}
+            logits, new_state = api.decode_span_paged_fn(
+                params, span, state, cfg, ctx)
+            new_cache = new_state["pages"]
+            greedy = jnp.argmax(
+                logits.astype(jnp.float32), axis=-1).astype(jnp.int32)
+            # greedy[:, t] is the model's target for position pos + t + 1;
+            # under sampling (temp > 0) greedy-match acceptance would
+            # change the output distribution, so drafts are voided (the
+            # guard is belt-and-braces: run() routes temp > 0 to the
+            # plain chunk and never pays for the span at all).
+            match = (drafts == greedy[:, :dk]) & (temp <= 0.0)
+            accepted = jnp.cumprod(match.astype(jnp.int32), axis=1)
+            a = accepted.sum(axis=1)  # (B,) accepted draft count
+            t_idx = jnp.arange(1 + dk)
+            emit_ok = (t_idx[None, :] <= a[:, None]) & ~done[:, None]
+            emit_ok &= (n_out[:, None] + t_idx[None, :]) < max_new[:, None]
+            if eos is not None:
+                is_eos = span == eos
+                prior = jnp.cumsum(is_eos.astype(jnp.int32),
+                                   axis=1) - is_eos
+                emit_ok &= prior == 0  # nothing emits past an EOS
+            emitted = jnp.where(emit_ok, span, PAD_TOKEN)
+            n_emit = emit_ok.sum(axis=1).astype(jnp.int32)
+            n_out = n_out + n_emit
+            newly_done = ~done & (n_out >= max_new)
+            if eos is not None:
+                newly_done |= ~done & jnp.any(emit_ok & is_eos, axis=1)
+            done = done | newly_done
+            # token history: scatter the emitted span at positions pos+t
+            wpos = jnp.clip(pos[:, None] + t_idx[None, :], 0, w - 1)
+            cur = hist[bidx[:, None], wpos]
+            hist = hist.at[bidx[:, None], wpos].set(
+                jnp.where(emit_ok, span, cur))
+            pos = pos + n_emit  # rollback == not advancing past acceptance
+            pick0 = self._pick(logits[:, :1], jax.random.fold_in(key, i),
+                               temp)
+            bonus = greedy[bidx, jnp.clip(a, 0, dk)][:, None]
+            nxt = jnp.where(temp > 0.0, pick0, bonus)
+            tok = jnp.where(done[:, None], tok, nxt)
+            return ((tok, pos, done, n_out, max_new, key, new_cache, hist),
+                    emitted)
+
+        def run_chunk_spec(params, table, tok, pos, done, n_out, max_new,
+                           key, temp, t0, cache, hist):
+            def step(carry, i):
+                return spec_chunk_body(params, table, temp, carry, i)
+
+            carry0 = (tok, pos, done, n_out, max_new, key, cache, hist)
+            carry, toks = jax.lax.scan(
+                step, carry0, t0 + jnp.arange(self.chunk))
+            tok, pos, done, n_out, max_new, _, cache, hist = carry
+            # toks (C, B, 1+dk) -> (B, C, 1+dk), chronological per slot
+            return (tok, pos, done, n_out, cache, hist,
+                    toks.transpose(1, 0, 2))
+
+        if dk:
+            self._run_chunk_spec = jax.jit(run_chunk_spec,
+                                           donate_argnums=(10, 11))
+
     # --------------------------------------------------------- carry state
 
     def _reset_carry(self) -> None:
@@ -237,6 +414,13 @@ class ServeEngine:
         self._n_out = jnp.zeros((b,), jnp.int32)
         self._max_new = jnp.ones((b,), jnp.int32)
         self._t = 0  # global decode-step clock (also the sampling stream)
+        if self.draft_k:
+            # token-at-position history for the prompt-lookup drafter.
+            # draft_k + 1 columns of headroom keep every span scatter
+            # index in range and distinct (a clipped duplicate write
+            # would resolve nondeterministically).
+            self._hist = jnp.zeros(
+                (b, self.window + self.draft_k + 1), jnp.int32)
 
     def _admit_into_slot(self, params, req: Request, slot: int,
                          key: Array, temp: Array) -> None:
@@ -244,7 +428,25 @@ class ServeEngine:
         s = len(rp)
         self.counters["prefills"] += 1
         pkey = self._prefill_key(key, req.rid)
-        if self.paged:
+        cached = req.cached_prefix_len if self.paged else 0
+        if self.paged and cached > 0:
+            # prefix hit: prefill only the suffix through the span-decode
+            # datapath (queries see the adopted pages via the table)
+            suffix = rp[cached:]
+            t = len(suffix)
+            tb = max(4, 1 << (t - 1).bit_length())  # pow2 bucket
+            self.suffix_bucket_sizes.add(tb)
+            span = np.zeros((1, tb), np.int32)
+            span[0, :t] = suffix
+            if not self.kv.ensure_private(slot, cached, self._copy_page):
+                raise RuntimeError("page pool exhausted during CoW fork")
+            first, self.kv.pages = self._prefill_span(
+                params, self.kv.pages, jnp.asarray(span),
+                self.kv.table_row(slot),
+                jnp.full((1,), cached, jnp.int32),
+                jnp.full((1,), t, jnp.int32), pkey, temp)
+            self.counters["suffix_prefills"] += 1
+        elif self.paged:
             padded = np.full((1, self.prefill_len), 0, np.int32)
             padded[0, :s] = rp
             first, blocks = self._prefill_paged(
@@ -265,6 +467,14 @@ class ServeEngine:
                 batch[k] = jnp.asarray(v)
             first, cache = self._prefill_dense(params, batch, pkey, temp)
             self.kv.write_prefill(self._write_dense, slot, cache)
+        if self.paged and self.prefix_cache:
+            # publish the full prompt pages so later admissions (and this
+            # request's own resume after a preemption) can share them
+            self.kv.register_prefix(slot, rp)
+        if self.draft_k and self._use_spec:
+            row = np.zeros(self.window + self.draft_k + 1, np.int32)
+            row[:s] = rp
+            self._hist = self._hist.at[slot].set(jnp.asarray(row))
         self._tok = self._tok.at[slot].set(first[0])
         self._pos = self._pos.at[slot].set(s)
         self._done = self._done.at[slot].set(False)
@@ -280,6 +490,19 @@ class ServeEngine:
                 f"request {req.rid}: prompt+max_new={total} exceeds "
                 f"window={self.window}")
 
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of admitted prompt tokens served from cached pages."""
+        total = self.counters["prompt_tokens"]
+        return (self.counters["cached_prompt_tokens"] / total
+                if total else 0.0)
+
+    @property
+    def acceptance_length(self) -> float:
+        """Mean tokens emitted per speculative verify step (>= 1)."""
+        steps = self.counters["spec_steps"]
+        return (self.counters["spec_tokens"] / steps if steps else 1.0)
+
     def run(self, params, requests: Sequence[Request], *,
             key: Optional[Array] = None,
             temperature: Optional[float] = None) -> Dict[int, np.ndarray]:
@@ -292,8 +515,14 @@ class ServeEngine:
         for req in requests:
             self.submit_check(req)
             sched.add(req)
+        # greedy-match acceptance is only sound (and only profitable) for
+        # greedy decoding: sampled runs take the plain 1-token chunk, so
+        # they never pay for the (1 + draft_k)-query span
+        self._use_spec = bool(self.draft_k) and float(temp) <= 0.0
         self._reset_carry()
         clock = 0
+        # max tokens one decode step can emit
+        per_step = 1 + self.draft_k if self._use_spec else 1
         while sched.has_work():
             # 1) page headroom for running slots; preempt youngest on
             #    pressure (its pages free up for the older requests)
@@ -311,7 +540,7 @@ class ServeEngine:
                     # tokens cached after the next chunk: prompt +
                     # emitted so far + chunk new writes (+1 boundary)
                     target = int(len(req.prompt) + len(req.generated)
-                                 + self.chunk + 1)
+                                 + self.chunk * per_step + 1)
                     while not self.kv.grow(slot, min(target, self.window)):
                         victim = sched.preempt_victim()
                         if victim is None:
@@ -331,9 +560,21 @@ class ServeEngine:
                     break
                 slot = slots[0]
                 if self.paged:
-                    need = len(req.resume_prompt()) + self.chunk + 1
+                    rp = req.resume_prompt()
+                    cached, pids = ((0, []) if not self.prefix_cache
+                                    else self.kv.lookup_prefix(rp))
+                    if cached:
+                        self.kv.adopt_prefix(slot, pids)
+                    need = len(rp) + self.chunk * per_step + 1
                     if not self.kv.grow(slot, min(need, self.window)):
+                        if self.prefix_cache:
+                            # undo adoption AND its counter bumps: the
+                            # retry next boundary repeats the lookup
+                            self.kv.abort_adoption(slot, cached, pids)
                         break  # no pages: wait for completions
+                    req.cached_prefix_len = cached
+                    self.counters["prompt_tokens"] += len(rp)
+                    self.counters["cached_prompt_tokens"] += cached
                 sched.admit(req, slot)
                 self._admit_into_slot(params, req, slot, key, temp)
             if not sched.running:
@@ -352,11 +593,18 @@ class ServeEngine:
                 {k: v for k, v in self.kv.cache.items() if k != "pos"}
             table = self.kv.table_device() if self.paged else jnp.zeros(
                 (self.max_batch, 1), jnp.int32)
-            (self._tok, self._pos, self._done, self._n_out, new_cache,
-             toks) = self._run_chunk(
-                params, table, self._tok, self._pos, self._done,
-                self._n_out, self._max_new, key, temp,
-                jnp.int32(self._t), cache)
+            if self._use_spec:
+                (self._tok, self._pos, self._done, self._n_out, new_cache,
+                 self._hist, toks) = self._run_chunk_spec(
+                    params, table, self._tok, self._pos, self._done,
+                    self._n_out, self._max_new, key, temp,
+                    jnp.int32(self._t), cache, self._hist)
+            else:
+                (self._tok, self._pos, self._done, self._n_out, new_cache,
+                 toks) = self._run_chunk(
+                    params, table, self._tok, self._pos, self._done,
+                    self._n_out, self._max_new, key, temp,
+                    jnp.int32(self._t), cache)
             if self.paged:
                 self.kv.pages = new_cache
             else:
@@ -373,13 +621,33 @@ class ServeEngine:
             self.counters["host_syncs"] += 1
             for slot in list(sched.running):
                 req = sched.running[slot]
-                for t in toks_h[slot]:
-                    if t != PAD_TOKEN:
-                        req.generated.append(int(t))
+                if self._use_spec:
+                    # toks_h[slot]: (chunk, 1+draft_k); emitted tokens
+                    # form a prefix of each step row
+                    for step_row in toks_h[slot]:
+                        cnt = 0
+                        for t in step_row:
+                            if t != PAD_TOKEN:
+                                req.generated.append(int(t))
+                                cnt += 1
+                        if cnt:
+                            self.counters["spec_steps"] += 1
+                            self.counters["spec_tokens"] += cnt
+                else:
+                    for t in toks_h[slot]:
+                        if t != PAD_TOKEN:
+                            req.generated.append(int(t))
                 finished = bool(done_h[slot])
                 if finished:
                     sched.complete(slot)
                     if self.paged:
+                        if self.prefix_cache:
+                            # publish generated pages too: multi-turn
+                            # prompts extending this output will hit
+                            self.kv.register_prefix(
+                                slot, np.concatenate(
+                                    [req.prompt,
+                                     np.asarray(req.generated, np.int32)]))
                         self.kv.release(slot)
                 elif self.paged and self.cfg.sliding_window is not None:
                     # SWA: positions behind pos - window are masked out of

@@ -12,20 +12,43 @@ Two memory layouts behind one slot-oriented interface:
     ``int8`` stores per-(token, head) scales alongside the pages (the
     Ironwood int8-KV memory lever; ~2x more resident requests per HBM).
 
+    On top of the pool sits **prefix caching** (serving millions of users
+    means most traffic shares prompt prefixes — system prompts, few-shot
+    templates):
+
+      * every page is reference-counted; ``adopt_prefix`` maps cached
+        pages into a new request's table row without copying (share),
+        ``fork`` gives a slot a private copy when a write would touch a
+        shared or published page (copy-on-write);
+      * full prompt pages are content-addressed in a global index — the
+        chain hash of page *i* folds the hash of page *i-1* with the
+        page's tokens, so a hit certifies the entire prefix, not just one
+        block;
+      * pages whose refcount drops to zero but whose content is indexed
+        stay resident as an LRU pool: allocation prefers the free list
+        and evicts least-recently-used cached pages only under pressure.
+
+    The lifecycle (see docs/serving.md for the full diagram)::
+
+        lookup_prefix -> adopt_prefix -> grow -> [suffix prefill]
+             -> register_prefix -> decode ... -> release
+                                    (refcount 0 + indexed => LRU cached)
+
 ``DenseKVCache``
     Per-slot ring/state caches (the classic layout) for every family —
     attention rings, Mamba conv+ssm state, RWKV token/wkv state,
     encoder-decoder cross-KV. Eviction is O(1): a slot's cache is simply
     overwritten by the next admitted request's prefill.
 
-The host side owns allocation bookkeeping (free page list / free slots);
-the device side is pure pytrees threaded through the jitted decode chunk.
+The host side owns allocation bookkeeping (free page list / refcounts /
+prefix index); the device side is pure pytrees threaded through the
+jitted decode chunk.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +60,8 @@ from repro.models.config import ModelConfig
 
 Array = jax.Array
 PyTree = Any
+
+_CHAIN_SEED = 0xA5A5A5A5
 
 
 def _zeros(spec: PyTree) -> PyTree:
@@ -70,17 +95,73 @@ class PagedKVCache:
         # because SWA trimming punches holes in the table — ``grow`` must
         # extend past the frontier, never refill trimmed history.
         self._frontier = np.zeros(self.max_batch, np.int64)
+        # prefix-cache bookkeeping ------------------------------------
+        # _ref[p]: live table references to page p (sharers)
+        self._ref = np.zeros(self.num_pages, np.int32)
+        # _index: chain hash -> (page id, block tokens). The tokens are
+        # kept so a hit is verified against the actual block — the chain
+        # hash alone is a fast 64-bit filter, not a proof of identity.
+        # _published: page id -> chain hash for every page whose content
+        # is in the index (whether a slot still references it or not).
+        # _evictable: insertion-ordered {pid: None} of published pages
+        # with refcount 0 — LRU order, O(1) evict/peek (re-inserted on
+        # every recency refresh, so dict order == recency order).
+        self._index: Dict[int, Tuple[int, Tuple[int, ...]]] = {}
+        self._published: Dict[int, int] = {}
+        self._evictable: Dict[int, None] = {}
+        self.counters = {"prefix_lookups": 0, "prefix_hit_tokens": 0,
+                         "pages_shared": 0, "pages_forked": 0,
+                         "pages_evicted": 0, "pages_published": 0}
 
     # ---------------------------------------------------------- allocation
 
     def free_page_count(self) -> int:
-        return len(self._free)
+        """Pages allocatable right now (free list + evictable cached)."""
+        return len(self._free) + len(self._evictable)
 
     def pages_for(self, tokens: int) -> int:
         return -(-tokens // self.page_size)
 
     def slot_pages(self, slot: int) -> List[int]:
         return [int(p) for p in self._table[slot] if p != 0]
+
+    def _evict_lru(self) -> Optional[int]:
+        """Reclaim the least-recently-used cached page nobody references."""
+        if not self._evictable:
+            return None
+        pid = next(iter(self._evictable))  # oldest recency
+        self._unpublish(pid)
+        self.counters["pages_evicted"] += 1
+        return pid
+
+    def _unpublish(self, pid: int) -> None:
+        h = self._published.pop(pid)
+        entry = self._index.get(h)
+        if entry is not None and entry[0] == pid:
+            del self._index[h]
+        self._evictable.pop(pid, None)
+
+    def _touch(self, pid: int) -> None:
+        """Move an evictable page to the most-recently-used end."""
+        if pid in self._evictable:
+            del self._evictable[pid]
+            self._evictable[pid] = None
+
+    def _alloc_page(self) -> Optional[int]:
+        pid = self._free.pop() if self._free else self._evict_lru()
+        if pid is not None:
+            self._ref[pid] = 1
+        return pid
+
+    def _drop_ref(self, pid: int) -> None:
+        self._ref[pid] -= 1
+        assert self._ref[pid] >= 0
+        if self._ref[pid] == 0:
+            if pid in self._published:
+                # content stays cached; becomes LRU-evictable
+                self._evictable[pid] = None
+            else:
+                self._free.append(pid)
 
     def grow(self, slot: int, target_tokens: int) -> bool:
         """Ensure the slot owns pages covering ``target_tokens``; returns
@@ -89,37 +170,158 @@ class PagedKVCache:
         need = self.pages_for(target_tokens) - have
         if need <= 0:
             return True
-        if need > len(self._free) or have + need > self.max_pages_per_seq:
+        if (need > self.free_page_count()
+                or have + need > self.max_pages_per_seq):
             return False
         for i in range(need):
-            self._table[slot, have + i] = self._free.pop()
+            self._table[slot, have + i] = self._alloc_page()
         self._frontier[slot] = have + need
         return True
 
     def trim(self, slot: int, keep_from_token: int) -> int:
-        """Free pages that lie wholly behind ``keep_from_token`` (the
+        """Release pages that lie wholly behind ``keep_from_token`` (the
         sliding-window lower bound: the attention mask already ignores
         those positions, so only the memory was still held). Their table
         entries become the trash page; the frontier is untouched, so the
-        slot keeps appending at its absolute position. Returns the number
-        of pages returned to the pool."""
+        slot keeps appending at its absolute position. Shared pages just
+        drop a reference; published ones stay cached. Returns the number
+        of references released."""
         first_keep = max(0, keep_from_token) // self.page_size
         freed = 0
         for i in range(min(first_keep, int(self._frontier[slot]))):
             page = int(self._table[slot, i])
             if page != 0:
-                self._free.append(page)
+                self._drop_ref(page)
                 self._table[slot, i] = 0
                 freed += 1
         return freed
 
     def release(self, slot: int) -> None:
-        self._free.extend(self.slot_pages(slot)[::-1])
+        for pid in self.slot_pages(slot)[::-1]:
+            self._drop_ref(pid)
         self._table[slot] = 0
         self._frontier[slot] = 0
 
     def table_device(self) -> Array:
         return jnp.asarray(self._table)
+
+    def table_row(self, slot: int) -> Array:
+        """The slot's page-table row as a (1, M) device array (the batch
+        view a single-request span prefill expects)."""
+        return jnp.asarray(self._table[slot:slot + 1])
+
+    # ------------------------------------------------------- prefix cache
+
+    def _prefix_blocks(self, tokens: np.ndarray
+                       ) -> List[Tuple[int, Tuple[int, ...]]]:
+        """(chain hash, block tokens) for every *full* page of ``tokens``:
+        hash i folds hash i-1 with page i's tokens, so equal hash is a
+        whole-prefix filter (lookups still verify the block tokens)."""
+        n_full = len(tokens) // self.page_size
+        out: List[Tuple[int, Tuple[int, ...]]] = []
+        h = _CHAIN_SEED
+        for i in range(n_full):
+            blk = tuple(int(t) for t in
+                        tokens[i * self.page_size:(i + 1) * self.page_size])
+            h = hash((h,) + blk)
+            out.append((h, blk))
+        return out
+
+    def prefix_hashes(self, tokens: np.ndarray) -> List[int]:
+        return [h for h, _ in self._prefix_blocks(tokens)]
+
+    def lookup_prefix(self, tokens: np.ndarray) -> Tuple[int, List[int]]:
+        """Longest indexed chain covering a *strict* prefix of ``tokens``
+        (at least one token is always left to prefill — its logits seed
+        decoding). Hits are verified against the stored block tokens (a
+        64-bit chain-hash collision must not serve another prompt's KV)
+        and refreshed to most-recently-used. Returns (cached token
+        count, page ids)."""
+        self.counters["prefix_lookups"] += 1
+        pids: List[int] = []
+        for h, blk in self._prefix_blocks(tokens):
+            entry = self._index.get(h)
+            if entry is None or entry[1] != blk:
+                break
+            pids.append(entry[0])
+        while pids and len(pids) * self.page_size >= len(tokens):
+            pids.pop()
+        for pid in pids:
+            self._touch(pid)
+        cached = len(pids) * self.page_size
+        self.counters["prefix_hit_tokens"] += cached
+        return cached, pids
+
+    def adopt_prefix(self, slot: int, pids: List[int]) -> None:
+        """Map cached pages into an empty slot's table row (share: no
+        copy, refcount only)."""
+        assert int(self._frontier[slot]) == 0 and not self.slot_pages(slot)
+        for i, pid in enumerate(pids):
+            self._table[slot, i] = pid
+            self._ref[pid] += 1
+            self._evictable.pop(pid, None)  # referenced again
+        self._frontier[slot] = len(pids)
+        self.counters["pages_shared"] += len(pids)
+
+    def abort_adoption(self, slot: int, cached: int,
+                       pids: List[int]) -> None:
+        """Roll back a lookup_prefix + adopt_prefix pair when admission
+        fails afterwards (page pressure): the slot's references are
+        released and the counter bumps reversed, so the retry at the
+        next chunk boundary doesn't double-count hit metrics."""
+        self.release(slot)
+        self.counters["prefix_lookups"] -= 1
+        self.counters["prefix_hit_tokens"] -= cached
+        self.counters["pages_shared"] -= len(pids)
+
+    def register_prefix(self, slot: int, tokens: np.ndarray) -> int:
+        """Publish the slot's full-page prefix KV into the global index.
+        Stops at the first table hole (SWA trim breaks the chain). Pages
+        already indexed (e.g. adopted ones) are left canonical. Returns
+        the number of newly published pages."""
+        n = 0
+        for i, (h, blk) in enumerate(self._prefix_blocks(tokens)):
+            pid = int(self._table[slot, i])
+            if pid == 0:
+                break
+            if h in self._index:
+                continue  # identical content already published
+            self._published[pid] = h
+            self._index[h] = (pid, blk)
+            n += 1
+        self.counters["pages_published"] += n
+        return n
+
+    def fork(self, slot: int, page_idx: int, copy_fn) -> bool:
+        """Copy-on-write: replace ``table[slot, page_idx]`` with a private
+        copy of the page (device copy via the engine-built jitted
+        ``copy_fn(pages, src, dst)``). Returns False when no page can be
+        allocated."""
+        src = int(self._table[slot, page_idx])
+        assert src != 0
+        new = self._alloc_page()
+        if new is None:
+            return False
+        self.pages = copy_fn(self.pages, jnp.int32(src), jnp.int32(new))
+        self._table[slot, page_idx] = new
+        self._drop_ref(src)
+        self.counters["pages_forked"] += 1
+        return True
+
+    def ensure_private(self, slot: int, from_token: int, copy_fn) -> bool:
+        """CoW guard before a write phase: fork any shared or published
+        page covering positions >= ``from_token``. A no-op in the normal
+        flow (cached prefixes are page-aligned and writes start past
+        them), but it makes the write path safe by construction."""
+        first = max(0, from_token) // self.page_size
+        for i in range(first, int(self._frontier[slot])):
+            pid = int(self._table[slot, i])
+            if pid == 0:
+                continue
+            if self._ref[pid] > 1 or pid in self._published:
+                if not self.fork(slot, i, copy_fn):
+                    return False
+        return True
 
     # ------------------------------------------------------------- device
 

@@ -8,10 +8,13 @@ chunks this scheduler owns every request-level decision:
   * **completion** — finished slots (EOS or token budget) are drained and
     freed mid-stream, so the batch refills without draining;
   * **preemption** — under page pressure the youngest running request is
-    evicted: its pages are freed and it re-queues with its generated
-    prefix folded into the prompt (recompute-style preemption; with
-    greedy sampling the resumed request reproduces the same tokens, which
-    is what the parity test pins).
+    evicted: its page references are dropped and it re-queues with its
+    generated prefix folded into the prompt. Resumption is *not* a full
+    recompute anymore: the victim's prompt pages were published to the
+    prefix index at admission, so (while they stay cached) re-admission
+    adopts them and prefills only the generated suffix — with greedy
+    sampling the resumed request reproduces the same tokens, which is
+    what the parity test pins.
 
 The scheduler is pure host-side bookkeeping — everything it decides is
 reflected to the device as page-table/pos updates before the next chunk.
@@ -43,6 +46,9 @@ class Request:
         self.state = "waiting"  # waiting | running | finished
         self.slot: int = -1
         self.preemptions = 0
+        # tokens served from the prefix cache at the latest admission
+        # (set by the engine; the prefill computed only the suffix)
+        self.cached_prefix_len = 0
         self.extras: Dict[str, np.ndarray] = {}  # e.g. enc_feats (1, S, D)
 
     @property

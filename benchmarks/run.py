@@ -1,18 +1,23 @@
 """Benchmark harness: one module per paper table/figure.
 
-Prints ``name,value,note`` CSV. Usage:
-  PYTHONPATH=src python -m benchmarks.run [--only table1,fig5,...]
+Prints ``name,value,note`` CSV; ``--json`` additionally writes one
+machine-readable ``BENCH_<suite>.json`` per suite run (e.g.
+``BENCH_serve.json`` / ``BENCH_kernels.json``) so a trajectory can be
+tracked across commits. Usage:
+  PYTHONPATH=src python -m benchmarks.run [--only table1,serve,...] [--json]
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
 from benchmarks import (bench_cci, bench_fleet, bench_goodput,
                         bench_kernels, bench_ocs, bench_perf_watt,
-                        bench_roofline, bench_sdc, bench_table1)
+                        bench_roofline, bench_sdc, bench_serve,
+                        bench_table1)
 
 SUITES = {
     "table1": bench_table1,
@@ -24,6 +29,7 @@ SUITES = {
     "sdc": bench_sdc,
     "kernels": bench_kernels,
     "roofline": bench_roofline,
+    "serve": bench_serve,
 }
 
 
@@ -33,10 +39,13 @@ def main() -> None:
                "documented in docs/benchmarks.md.")
     ap.add_argument("--only", default=None,
                     help="comma-separated suite names")
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_<suite>.json per suite run")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     failures = []
+    rows: list = []
 
     def emit(name: str, value, note: str = "") -> None:
         if isinstance(value, float):
@@ -44,6 +53,7 @@ def main() -> None:
         else:
             val = str(value)
         print(f"{name},{val},{note}", flush=True)
+        rows.append({"name": name, "value": value, "note": note})
         if "MISMATCH" in note or "FAILED" in note:
             failures.append(name)
 
@@ -51,9 +61,15 @@ def main() -> None:
     for name, mod in SUITES.items():
         if only and name not in only:
             continue
+        rows = []
         t0 = time.time()
         mod.run(emit)
         emit(f"{name}/_suite_seconds", time.time() - t0, "")
+        if args.json:
+            path = f"BENCH_{name}.json"
+            with open(path, "w") as f:
+                json.dump(rows, f, indent=1, default=str)
+            print(f"# wrote {path}", flush=True)
     if failures:
         print(f"\n{len(failures)} MISMATCH/FAILED rows: {failures[:10]}",
               file=sys.stderr)

@@ -7,3 +7,7 @@ cd "$(dirname "$0")/.."
 # docs drift nags but never blocks the test gate
 python scripts/docs_check.py || echo "(docs-check failed; non-fatal)"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+# kernel-routing gate: every paged serving path through the Pallas
+# kernels (interpret mode, fp + int8) must match the jnp oracle engine
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python benchmarks/bench_serve.py --smoke

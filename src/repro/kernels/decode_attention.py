@@ -127,14 +127,22 @@ def decode_attention(
 # step DMAs one *page* selected through the scalar-prefetched page table —
 # the BlockSpec index_map reads ``table[b, j]``, so the gather happens at
 # DMA-issue time with no HBM materialization of a contiguous cache
-# (vLLM-style paged attention as a Pallas grid).
+# (vLLM-style paged attention as a Pallas grid). int8 pools are
+# quantization-native: the page-aligned (N, P, KV) scale pages ride the
+# same table entry as their KV page and dequantize in VMEM, so a
+# quantized cache streams half the HBM bytes per token instead of paying
+# a gather-dequant materialization (the Ironwood int8-KV memory lever).
 # ---------------------------------------------------------------------------
 
 
-def _paged_decode_kernel(pos_ref, table_ref, q_ref, k_ref, v_ref, o_ref,
-                         m_ref, l_ref, acc_ref, *,
+def _paged_decode_kernel(pos_ref, table_ref, q_ref, k_ref, v_ref, *rest,
                          page_size: int, n_pages: int,
-                         window: Optional[int], scale: float, groups: int):
+                         window: Optional[int], scale: float, groups: int,
+                         quantized: bool):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
     ib, ij = pl.program_id(0), pl.program_id(1)
 
     @pl.when(ij == 0)
@@ -146,6 +154,10 @@ def _paged_decode_kernel(pos_ref, table_ref, q_ref, k_ref, v_ref, o_ref,
     pos = pos_ref[ib]
     q = q_ref[0].astype(jnp.float32) * scale  # (H, d)
     k = k_ref[0].astype(jnp.float32)          # (P, KV, d)
+    if quantized:
+        # in-VMEM dequant: int8 page bytes streamed from HBM, scale page
+        # (P, KV) DMA'd through the same table entry
+        k = k * ks_ref[0].astype(jnp.float32)[..., None]
     p, kv, d = k.shape
     h = q.shape[0]
     qg = q.reshape(kv, groups, d)
@@ -167,6 +179,8 @@ def _paged_decode_kernel(pos_ref, table_ref, q_ref, k_ref, v_ref, o_ref,
     corr = jnp.exp(m_prev - m_new)
     l_ref[...] = l_ref[...] * corr + pr.sum(axis=-1)
     v_f = v_ref[0].astype(jnp.float32)
+    if quantized:
+        v_f = v_f * vs_ref[0].astype(jnp.float32)[..., None]
     pv = jax.lax.dot_general(
         pr, v_f, (((2,), (0,)), ((0,), (1,))),
         preferred_element_type=jnp.float32)
@@ -180,17 +194,22 @@ def _paged_decode_kernel(pos_ref, table_ref, q_ref, k_ref, v_ref, o_ref,
             o_ref.dtype)
 
 
-def _paged_span_kernel(pos_ref, table_ref, q_ref, k_ref, v_ref, o_ref,
-                       m_ref, l_ref, acc_ref, *,
+def _paged_span_kernel(pos_ref, table_ref, q_ref, k_ref, v_ref, *rest,
                        page_size: int, n_pages: int,
-                       window: Optional[int], scale: float, groups: int):
+                       window: Optional[int], scale: float, groups: int,
+                       quantized: bool):
     """k-token-query variant of ``_paged_decode_kernel``.
 
     The query block carries ``span`` consecutive tokens of one sequence
-    (speculative draft-verify, or a suffix prefill behind a cached
-    prefix). Query t sits at absolute position ``pos + t`` and is masked
-    causally against the streamed pages — the online-softmax state gains
-    a span axis, everything else is the one-pass page stream."""
+    (speculative draft-verify, a suffix prefill behind a cached prefix,
+    or one chunk of a cold chunked prefill). Query t sits at absolute
+    position ``pos + t`` and is masked causally against the streamed
+    pages — the online-softmax state gains a span axis, everything else
+    is the one-pass page stream."""
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
     ib, ij = pl.program_id(0), pl.program_id(1)
 
     @pl.when(ij == 0)
@@ -202,6 +221,8 @@ def _paged_span_kernel(pos_ref, table_ref, q_ref, k_ref, v_ref, o_ref,
     pos = pos_ref[ib]
     q = q_ref[0].astype(jnp.float32) * scale  # (T, H, d)
     k = k_ref[0].astype(jnp.float32)          # (P, KV, d)
+    if quantized:
+        k = k * ks_ref[0].astype(jnp.float32)[..., None]
     p, kv, d = k.shape
     t, h = q.shape[0], q.shape[1]
     qg = q.reshape(t, kv, groups, d)
@@ -227,6 +248,8 @@ def _paged_span_kernel(pos_ref, table_ref, q_ref, k_ref, v_ref, o_ref,
     corr = jnp.exp(m_prev - m_new)
     l_ref[...] = l_ref[...] * corr + pr.sum(axis=-1)
     v_f = v_ref[0].astype(jnp.float32)  # (P, KV, d)
+    if quantized:
+        v_f = v_f * vs_ref[0].astype(jnp.float32)[..., None]
     pv = jax.lax.dot_general(
         pr, v_f, (((3,), (0,)), ((0,), (1,))),
         preferred_element_type=jnp.float32)  # (KV, T, groups, d)
@@ -240,9 +263,21 @@ def _paged_span_kernel(pos_ref, table_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0, ...] = out.reshape(t, h, d).astype(o_ref.dtype)
 
 
+def _scale_specs(quantized: bool, p: int, kv: int):
+    """BlockSpecs for the (N, P, KV) scale pages: one (1, P, KV) scale
+    block rides the same scalar-prefetched table entry as its KV page."""
+    if not quantized:
+        return []
+    return [pl.BlockSpec((1, p, kv),
+                         lambda i, j, pos_ref, tab_ref:
+                         (tab_ref[i, j], 0, 0))] * 2
+
+
 def paged_decode_span_attention(
     q: Array, k_pages: Array, v_pages: Array, page_table: Array,
     pos: Array, *,
+    k_scale: Optional[Array] = None,
+    v_scale: Optional[Array] = None,
     window: Optional[int] = None,
     interpret: bool = False,
 ) -> Array:
@@ -256,10 +291,14 @@ def paged_decode_span_attention(
     groups = h // kv
     grid = (b, m)
     scale = d ** -0.5
+    quantized = k_scale is not None
+    operands = (q, k_pages, v_pages) + (
+        (k_scale, v_scale) if quantized else ())
     return pl.pallas_call(
         functools.partial(
             _paged_span_kernel, page_size=p, n_pages=m,
-            window=window, scale=scale, groups=groups),
+            window=window, scale=scale, groups=groups,
+            quantized=quantized),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,
             grid=grid,
@@ -272,6 +311,7 @@ def paged_decode_span_attention(
                 pl.BlockSpec((1, p, kv, d),
                              lambda i, j, pos_ref, tab_ref:
                              (tab_ref[i, j], 0, 0, 0)),
+                *_scale_specs(quantized, p, kv),
             ],
             out_specs=pl.BlockSpec((1, t, h, d),
                                    lambda i, j, pos_ref, tab_ref:
@@ -284,12 +324,14 @@ def paged_decode_span_attention(
         ),
         out_shape=jax.ShapeDtypeStruct((b, t, h, d), q.dtype),
         interpret=interpret,
-    )(pos, page_table, q, k_pages, v_pages)
+    )(pos, page_table, *operands)
 
 
 def paged_decode_attention(
     q: Array, k_pages: Array, v_pages: Array, page_table: Array,
     pos: Array, *,
+    k_scale: Optional[Array] = None,
+    v_scale: Optional[Array] = None,
     window: Optional[int] = None,
     interpret: bool = False,
 ) -> Array:
@@ -297,8 +339,10 @@ def paged_decode_attention(
     ids (unused entries point at the reserved trash page 0); pos: (B,)
     per-request valid token count. Returns (B, H, D).
 
-    int8 pages are dequantized by the caller (jnp oracle path); this
-    kernel streams fp/bf pages.
+    int8 pages stream natively: pass the page-aligned ``k_scale`` /
+    ``v_scale`` pools (N, P, KV) and the kernel DMAs each scale page
+    through the same table entry as its KV page, dequantizing in VMEM —
+    half the HBM bytes per token, no gather materialization.
     """
     b, h, d = q.shape
     n, p, kv, _ = k_pages.shape
@@ -306,10 +350,13 @@ def paged_decode_attention(
     groups = h // kv
     grid = (b, m)
     scale = d ** -0.5
+    quantized = k_scale is not None
+    operands = (q, k_pages, v_pages) + (
+        (k_scale, v_scale) if quantized else ())
     return pl.pallas_call(
         functools.partial(
             _paged_decode_kernel, page_size=p, n_pages=m, window=window,
-            scale=scale, groups=groups),
+            scale=scale, groups=groups, quantized=quantized),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,
             grid=grid,
@@ -322,6 +369,7 @@ def paged_decode_attention(
                 pl.BlockSpec((1, p, kv, d),
                              lambda i, j, pos_ref, tab_ref:
                              (tab_ref[i, j], 0, 0, 0)),
+                *_scale_specs(quantized, p, kv),
             ],
             out_specs=pl.BlockSpec((1, h, d),
                                    lambda i, j, pos_ref, tab_ref: (i, 0, 0)),
@@ -333,4 +381,4 @@ def paged_decode_attention(
         ),
         out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
         interpret=interpret,
-    )(pos, page_table, q, k_pages, v_pages)
+    )(pos, page_table, *operands)

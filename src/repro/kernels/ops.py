@@ -68,38 +68,48 @@ def decode_attention(q: Array, k_cache: Array, v_cache: Array, pos: Array,
 @partial(jax.jit, static_argnames=("impl", "window"))
 def paged_decode_attention(q: Array, k_pages: Array, v_pages: Array,
                            page_table: Array, pos: Array, *,
+                           k_scale: Optional[Array] = None,
+                           v_scale: Optional[Array] = None,
                            impl: str = "pallas",
                            window: Optional[int] = None) -> Array:
     """q: (B,H,D); pages (N,P,KV,D); page_table (B,M); pos (B,).
 
-    "ref" gathers the pages and reuses the dense ring oracle (no wraps:
-    every absolute position is < M*P by construction)."""
+    int8 pages stream natively when the (N,P,KV) ``k_scale``/``v_scale``
+    pools are passed: the kernel dequantizes in VMEM, page by page.
+    "ref" gathers (and dequantizes) the pages and reuses the dense ring
+    oracle (no wraps: every absolute position is < M*P by
+    construction)."""
     if impl == "ref":
-        n, p, kv, d = k_pages.shape
-        b, m = page_table.shape
-        kg = k_pages[page_table].reshape(b, m * p, kv, d)
-        vg = v_pages[page_table].reshape(b, m * p, kv, d)
+        kg = ref.paged_gather_dequant_ref(k_pages, page_table, k_scale,
+                                          q.dtype)
+        vg = ref.paged_gather_dequant_ref(v_pages, page_table, v_scale,
+                                          q.dtype)
         return ref.decode_attention_ref(q, kg, vg, pos, window=window)
     return _paged_decode_pl(q, k_pages, v_pages, page_table, pos,
+                            k_scale=k_scale, v_scale=v_scale,
                             window=window, interpret=impl == "interpret")
 
 
 @partial(jax.jit, static_argnames=("impl", "window"))
 def paged_decode_span_attention(q: Array, k_pages: Array, v_pages: Array,
                                 page_table: Array, pos: Array, *,
+                                k_scale: Optional[Array] = None,
+                                v_scale: Optional[Array] = None,
                                 impl: str = "pallas",
                                 window: Optional[int] = None) -> Array:
     """k-token-query paged decode. q: (B,T,H,D) — T consecutive tokens
     per sequence at absolute positions ``pos .. pos+T-1`` (speculative
-    verify / suffix prefill); pages (N,P,KV,D); page_table (B,M);
-    pos (B,) valid count BEFORE the span. Returns (B,T,H,D)."""
+    verify / suffix prefill / chunked cold prefill); pages (N,P,KV,D);
+    page_table (B,M); pos (B,) valid count BEFORE the span. int8 pages
+    stream natively via ``k_scale``/``v_scale``. Returns (B,T,H,D)."""
     if impl == "ref":
-        n, p, kv, d = k_pages.shape
-        b, m = page_table.shape
-        kg = k_pages[page_table].reshape(b, m * p, kv, d)
-        vg = v_pages[page_table].reshape(b, m * p, kv, d)
+        kg = ref.paged_gather_dequant_ref(k_pages, page_table, k_scale,
+                                          q.dtype)
+        vg = ref.paged_gather_dequant_ref(v_pages, page_table, v_scale,
+                                          q.dtype)
         return ref.decode_span_attention_ref(q, kg, vg, pos, window=window)
     return _paged_span_pl(q, k_pages, v_pages, page_table, pos,
+                          k_scale=k_scale, v_scale=v_scale,
                           window=window, interpret=impl == "interpret")
 
 

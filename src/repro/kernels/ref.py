@@ -85,6 +85,21 @@ def decode_span_attention_ref(q: Array, k_cache: Array, v_cache: Array,
     return out.astype(q.dtype)
 
 
+def paged_gather_dequant_ref(pages: Array, page_table: Array,
+                             scale: Optional[Array], dtype) -> Array:
+    """Materialize each request's contiguous KV view from the page pool:
+    (N, P, KV, D) pages + (B, M) table -> (B, M*P, KV, D) in ``dtype``.
+    ``scale`` (N, P, KV) dequantizes int8 pages. This is the gather
+    oracle the in-kernel page stream is checked against — the kernel
+    never materializes this array."""
+    n, p, kv, d = pages.shape
+    b, m = page_table.shape
+    g = pages[page_table]  # (B, M, P, KV, D)
+    if scale is not None:
+        g = g.astype(jnp.float32) * scale[page_table][..., None]
+    return g.astype(dtype).reshape(b, m * p, kv, d)
+
+
 def rwkv_wkv_ref(r: Array, k: Array, v: Array, logw: Array,
                  u: Array) -> Array:
     """Token-serial recurrence (the definitional oracle).

@@ -65,6 +65,9 @@ def main() -> None:
                     help="self-speculative draft length (paged archs)")
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="disable prompt-prefix page sharing")
+    ap.add_argument("--prefill-chunk", type=int, default=128,
+                    help="span size for chunked prefill (clamped to the "
+                         "window; final partial chunk buckets to pow2)")
     ap.add_argument("--quantize", choices=["none", "int8", "fp8"],
                     default="none")
     ap.add_argument("--kv-int8", action="store_true",
@@ -90,7 +93,8 @@ def main() -> None:
                          chunk=args.chunk, page_size=args.page_size,
                          temperature=args.temperature,
                          draft_k=args.draft_k if paged else 0,
-                         prefix_cache=(paged and not args.no_prefix_cache))
+                         prefix_cache=(paged and not args.no_prefix_cache),
+                         prefill_chunk=args.prefill_chunk)
     mode = "paged" if engine.paged else "dense"
     rng = np.random.default_rng(args.seed)
 

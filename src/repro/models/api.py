@@ -58,6 +58,19 @@ def decode_fn(params, token, cache, cfg: ModelConfig, ctx: ModelContext):
     return lm.lm_decode_step(params, token, cache, cfg, ctx)
 
 
+def decode_span_fn(params, tokens, cache, cfg: ModelConfig,
+                   ctx: ModelContext, logits_at=None):
+    """T-token span decode against dense per-slot caches — the
+    chunked-prefill datapath for hybrid (attention + state) stacks.
+    ``cache["pos"]`` may be negative: positions < 0 are the dead front
+    padding of a right-aligned first chunk (see lm.lm_decode_span).
+    ``logits_at`` (B,) gathers one position's logits before the lm head."""
+    if cfg.is_encoder_decoder:
+        raise ValueError(f"{cfg.name}: span decode requires decoder-only")
+    return lm.lm_decode_span(params, tokens, cache, cfg, ctx,
+                             logits_at=logits_at)
+
+
 def supports_paged_decode(cfg: ModelConfig) -> bool:
     """Paged KV applies to pure-attention decoder-only stacks; SSM/RWKV
     sublayers carry O(1) state and encoder-decoder keeps cross-KV."""
@@ -83,16 +96,17 @@ def decode_paged_fn(params, token, state, cfg: ModelConfig,
 
 
 def decode_span_paged_fn(params, tokens, state, cfg: ModelConfig,
-                         ctx: ModelContext, valid=None):
+                         ctx: ModelContext, valid=None, logits_at=None):
     """T-token span decode against the paged pool: one batched paged-
     attention call scores T consecutive tokens per request (speculative
-    draft-verify; suffix prefill behind a cached prefix). ``pos`` in the
-    returned state is unchanged — the caller owns acceptance/rollback
-    (see lm.lm_decode_span_paged)."""
+    draft-verify; suffix/chunked prefill). ``logits_at`` (B,) gathers a
+    single position's logits before the lm head (prefill chunks);
+    ``pos`` in the returned state is unchanged — the caller owns
+    acceptance/rollback (see lm.lm_decode_span_paged)."""
     if not supports_paged_decode(cfg):
         raise ValueError(f"{cfg.name}: no paged decode for this family")
     return lm.lm_decode_span_paged(params, tokens, state, cfg, ctx,
-                                   valid=valid)
+                                   valid=valid, logits_at=logits_at)
 
 
 def train_batch_specs(cfg: ModelConfig, batch: int,

@@ -408,27 +408,117 @@ def block_decode(block_params, x, cache, pos, cfg, ctx,
     return x, new_cache
 
 
+# -- dense span decode: T consecutive tokens against per-slot caches --------
+#
+# The dense-backend counterpart of the paged span path, and the datapath
+# behind *chunked prefill* for hybrid (attention + state) stacks: a prompt
+# is processed in fixed-size spans at absolute positions, so attention
+# never needs front padding to bucket (positions are explicit), while the
+# recurrent state of mamba/rwkv sublayers threads through the chunks.
+# ``live`` marks real positions: a right-aligned prompt front-pads only its
+# FIRST chunk, and dead positions are proven inert — their embeddings are
+# zeroed by the caller, their cache writes are dropped, and every sublayer
+# output is re-masked so the residual stream stays exactly 0 there (the
+# recurrent state passes through a dead prefix untouched; see
+# mamba_forward's seq_mask contract).
+
+
+def sublayer_decode_span(p, x, cache, pos, live, cfg: ModelConfig,
+                         ctx: ModelContext, idx):
+    """T-token span decode against dense per-slot caches (all families).
+
+    x: (B,T,D) at absolute positions ``pos .. pos+T-1`` (already zeroed
+    at dead positions); live: (B,T) bool. Attention caches must be
+    append-only views (window >= total length — no ring wrap): k/v write
+    at their absolute slot, dead writes are dropped."""
+    kind = cfg.sublayer_kinds()[idx]
+    dtype = ctx.compute_dtype
+    b, t, _ = x.shape
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind == "attn":
+        q, k, v = _project_qkv(p["core"], h, cfg, dtype)
+        posn = pos[:, None] + jnp.arange(t)[None, :]  # (B, T)
+        q, k = apply_positional(q, k, cfg, posn, None)
+        w = cache["k"].shape[1]
+        bidx = jnp.arange(b)[:, None]
+        # dead positions write out of bounds and are dropped
+        slot = jnp.where(live, posn, w)
+        newk = cache["k"].at[bidx, slot].set(
+            k.astype(ctx.cache_dtype), mode="drop")
+        newv = cache["v"].at[bidx, slot].set(
+            v.astype(ctx.cache_dtype), mode="drop")
+        out = decode_span_attention(q, newk.astype(dtype),
+                                    newv.astype(dtype), pos, cfg)
+        core = jnp.einsum("bshk,hkd->bsd", out,
+                          p["core"]["wo"].astype(dtype))
+        new_cache = {"k": newk, "v": newv}
+    elif kind == "mamba":
+        core, (conv, ssm) = mamba_forward(
+            p["core"], h, cfg, dtype, chunk=ctx.mamba_chunk,
+            init_state=(cache["conv"], cache["ssm"]), return_state=True,
+            seq_mask=live)
+        new_cache = {"conv": conv, "ssm": ssm}
+    else:  # rwkv
+        core, (tok, wkv) = rwkv_time_mix(
+            p["core"], h, cfg, dtype, chunk=ctx.rwkv_chunk,
+            init_state=(cache["tok"], cache["wkv"]), return_state=True)
+        new_cache = {"tok": tok, "wkv": wkv}
+    # dead positions must stay exactly 0 in the residual stream: a dead
+    # query's attention output is garbage (all-masked softmax) and would
+    # otherwise leak into the next sublayer's conv window
+    core = jnp.where(live[..., None], core, 0.0).astype(dtype)
+    x = x + core
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if kind == "rwkv":
+        mlp, cm_tok = rwkv_channel_mix(p["mlp"], h, cfg, dtype,
+                                       prev=cache["cm_tok"],
+                                       return_state=True)
+        new_cache["cm_tok"] = cm_tok
+    elif cfg.sublayer_has_moe(idx):
+        mlp, _ = moe_ffn(p["mlp"], h, cfg, dtype, shard=ctx.shard,
+                         dropless=True)
+    else:
+        mlp = dense_ffn(p["mlp"], h, cfg, dtype)
+    x = x + jnp.where(live[..., None], mlp, 0.0).astype(dtype)
+    return x, new_cache
+
+
+def block_decode_span(block_params, x, cache, pos, live, cfg, ctx):
+    new_cache = {}
+    for i in range(cfg.block_len):
+        x, new_cache[f"sl{i}"] = sublayer_decode_span(
+            block_params[f"sl{i}"], x, cache[f"sl{i}"], pos, live, cfg,
+            ctx, i)
+    return x, new_cache
+
+
 # -- paged decode: block/paged KV cache (serving) ---------------------------
 #
 # Pages are a shared pool per layer: k/v of shape (num_pages, page_size,
-# KV, D), plus optional per-slot dequant scales when the cache dtype is
-# int8. A request owns a list of page ids (its ``page_table`` row, padded
-# with the reserved trash page 0); token ``p`` lives in page
-# ``table[p // page_size]`` at slot ``p % page_size``. Only attention
-# sublayers have paged state — state-space/RWKV layers carry O(1) state and
-# gain nothing from paging.
+# KV, D), plus page-aligned scale pages (num_pages, page_size, KV) when the
+# cache dtype is int8 — scale pages DMA through the same scalar-prefetched
+# page table as the KV pages, so the Pallas kernels dequantize in VMEM and
+# quantized caches never pay a gather materialization. A request owns a
+# list of page ids (its ``page_table`` row, padded with the reserved trash
+# page 0); token ``p`` lives in page ``table[p // page_size]`` at slot
+# ``p % page_size``. Only attention sublayers have paged state —
+# state-space/RWKV layers carry O(1) state and gain nothing from paging.
 
 
 def paged_quantize(x: Array, dtype) -> Tuple[Array, Optional[Array]]:
     """Per-(token, kv-head) symmetric int8 quantization hook.
 
-    x: (..., KV, D). Returns (stored, scale or None); scale shape (..., KV).
-    """
+    x: (..., KV, D). Returns (stored, scale or None); scale shape
+    (..., KV) in bf16 — the storage dtype of the scale pages — and the
+    values are quantized against that rounded scale so dequantization
+    inverts exactly."""
     if dtype != jnp.int8:
         return x.astype(dtype), None
     scale = jnp.maximum(jnp.max(jnp.abs(x), axis=-1), 1e-8) / 127.0
-    q = jnp.clip(jnp.round(x / scale[..., None]), -127, 127).astype(jnp.int8)
-    return q, scale.astype(jnp.float32)
+    scale = scale.astype(jnp.bfloat16)
+    q = jnp.clip(jnp.round(x / scale[..., None].astype(jnp.float32)),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
 
 
 def paged_dequantize(x: Array, scale: Optional[Array], dtype) -> Array:
@@ -447,10 +537,13 @@ def paged_sublayer_cache_spec(cfg: ModelConfig, num_pages: int,
         "v": jax.ShapeDtypeStruct((num_pages, page_size, kv, hd), cdt),
     }
     if cdt == jnp.int8:
+        # bf16 scale pages: ample precision for a max-abs/127 scale, and
+        # the pool stays well under half the bf16 cache's bytes — the
+        # capacity lever the int8 page stream exists for
         spec["k_scale"] = jax.ShapeDtypeStruct(
-            (num_pages, page_size, kv), jnp.float32)
+            (num_pages, page_size, kv), jnp.bfloat16)
         spec["v_scale"] = jax.ShapeDtypeStruct(
-            (num_pages, page_size, kv), jnp.float32)
+            (num_pages, page_size, kv), jnp.bfloat16)
     return spec
 
 
@@ -499,17 +592,23 @@ def sublayer_decode_paged(p, x, pages, page_table, pos, cfg: ModelConfig,
     if ks is not None:
         new_pages["k_scale"] = pages["k_scale"].at[pid, slot].set(ks)
         new_pages["v_scale"] = pages["v_scale"].at[pid, slot].set(vs)
-    if ctx.attn_impl in ("pallas", "pallas_interpret") and ks is None:
+    if ctx.attn_impl in ("pallas", "pallas_interpret"):
         # stream pages straight through the scalar-prefetch Pallas kernel
         # — no HBM materialization of a contiguous per-request cache.
-        # int8 pages need the dequant path, so they stay on the oracle.
+        # int8 pages stream natively: the (N, P, KV) scale pages ride the
+        # same table entry and dequantize in VMEM, so quantized caches
+        # read half the bytes per token instead of paying a gather.
         from repro.kernels import ops as kops
         out = kops.paged_decode_attention(
             q[:, 0], new_pages["k"], new_pages["v"], page_table, pos + 1,
+            k_scale=new_pages.get("k_scale"),
+            v_scale=new_pages.get("v_scale"),
             impl=("interpret" if ctx.attn_impl == "pallas_interpret"
                   else "pallas"),
             window=cfg.sliding_window)[:, None]
     else:
+        # jnp gather-dequant oracle (the correctness contract for the
+        # kernel route; materializes a contiguous per-request view)
         kg, vg = _paged_gather(new_pages, page_table, dtype)
         out = decode_attention(q, kg, vg, pos + 1, cfg)
     core = jnp.einsum("bshk,hkd->bsd", out, p["core"]["wo"].astype(dtype))
@@ -535,7 +634,8 @@ def block_decode_paged(block_params, x, pages, page_table, pos, cfg, ctx):
 
 # -- paged span decode: T consecutive tokens in one batched call ------------
 #
-# The datapath behind speculative decoding and prefix-cache suffix prefill:
+# The datapath behind speculative decoding, prefix-cache suffix prefill,
+# AND chunked cold prefill (every paged serving path is a page-stream now):
 # a span of T tokens per request is scored in ONE paged-attention call —
 # the span's k/v are scattered into the pages first (append-only), then
 # query t attends causally through absolute position pos + t. Rolling back
@@ -571,10 +671,14 @@ def sublayer_decode_span_paged(p, x, pages, page_table, pos, live,
     if ks is not None:
         new_pages["k_scale"] = pages["k_scale"].at[pid, slot].set(ks)
         new_pages["v_scale"] = pages["v_scale"].at[pid, slot].set(vs)
-    if ctx.attn_impl in ("pallas", "pallas_interpret") and ks is None:
+    if ctx.attn_impl in ("pallas", "pallas_interpret"):
+        # same page stream as single-token decode: int8 scale pages DMA
+        # through the table, dequantize in VMEM — no gather oracle
         from repro.kernels import ops as kops
         out = kops.paged_decode_span_attention(
             q, new_pages["k"], new_pages["v"], page_table, pos,
+            k_scale=new_pages.get("k_scale"),
+            v_scale=new_pages.get("v_scale"),
             impl=("interpret" if ctx.attn_impl == "pallas_interpret"
                   else "pallas"),
             window=cfg.sliding_window)

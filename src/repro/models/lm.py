@@ -14,8 +14,8 @@ import jax.numpy as jnp
 
 from repro.models.blocks import (ModelContext, block_cache_spec,
                                  block_decode, block_decode_paged,
-                                 block_decode_span_paged, block_forward,
-                                 block_prefill, block_specs,
+                                 block_decode_span, block_decode_span_paged,
+                                 block_forward, block_prefill, block_specs,
                                  paged_block_cache_spec, stack_specs)
 from repro.models.config import ModelConfig
 from repro.models.ops import embed_lookup, rms_norm, softmax_cross_entropy
@@ -160,6 +160,56 @@ def lm_decode_step(params: Dict[str, Any], token: Array,
     return logits, {"blocks": new_blocks, "pos": pos + 1}
 
 
+def _span_logits_slice(x: Array, logits_at: Optional[Array]) -> Array:
+    """Prefill chunks only need ONE position's logits: gather it before
+    the lm head so the vocab projection is (B,1,V), not (B,T,V) —
+    spec verify passes ``logits_at=None`` and keeps the whole span."""
+    if logits_at is None:
+        return x
+    b = x.shape[0]
+    idx = jnp.broadcast_to(logits_at[:, None, None], (b, 1, x.shape[-1]))
+    return jnp.take_along_axis(x, idx, axis=1)
+
+
+def lm_decode_span(params: Dict[str, Any], tokens: Array,
+                   cache: Dict[str, Any], cfg: ModelConfig,
+                   ctx: ModelContext,
+                   logits_at: Optional[Array] = None
+                   ) -> Tuple[Array, Dict[str, Any]]:
+    """T-token span decode against dense per-slot caches (all sublayer
+    families) — the chunked-prefill datapath for hybrid (jamba) stacks.
+
+    tokens: (B,T) int32 at absolute positions ``pos .. pos+T-1`` where
+    ``pos = cache["pos"]`` may be negative: positions < 0 are dead
+    (the front padding of a right-aligned prompt's first chunk) — their
+    embeddings are zeroed, their cache writes dropped, and the residual
+    stream stays exactly 0 there, so the recurrent state of mamba/rwkv
+    sublayers passes through untouched. Attention caches must hold
+    absolute slots (window >= total length; no ring wrap).
+    ``logits_at`` (B,): return only that position's logits (B,1,V).
+    Returns (logits, new cache with ``pos`` UNCHANGED — the caller owns
+    position bookkeeping, exactly like the paged span path)."""
+    pos = cache["pos"]
+    b, t = tokens.shape
+    posn = pos[:, None] + jnp.arange(t)[None, :]
+    live = posn >= 0  # (B, T)
+    x = embed_lookup(params["embed"], tokens, ctx.compute_dtype)
+    x = x * live[..., None].astype(x.dtype)
+    x = ctx.shard(x, ("batch", None, "embed"))
+
+    def body(x, xs):
+        bp, bc = xs
+        x, nc = block_decode_span(bp, x, bc, pos, live, cfg, ctx)
+        return x, nc
+
+    x, new_blocks = jax.lax.scan(body, x, (params["blocks"],
+                                           cache["blocks"]))
+    x = _span_logits_slice(x, logits_at)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, x, cfg, ctx)
+    return logits, {"blocks": new_blocks, "pos": pos}
+
+
 # -- paged serving state ----------------------------------------------------
 
 
@@ -205,16 +255,19 @@ def lm_decode_step_paged(params: Dict[str, Any], token: Array,
 def lm_decode_span_paged(params: Dict[str, Any], tokens: Array,
                          state: Dict[str, Any], cfg: ModelConfig,
                          ctx: ModelContext,
-                         valid: Optional[Array] = None
+                         valid: Optional[Array] = None,
+                         logits_at: Optional[Array] = None
                          ) -> Tuple[Array, Dict[str, Any]]:
     """T-token span decode against the paged pool (speculative verify /
-    prefix-cache suffix prefill).
+    suffix prefill / chunked cold prefill).
 
     tokens: (B,T) int32 at absolute positions ``pos .. pos+T-1``;
     ``valid`` (B,): number of real tokens in the span (default all T) —
     padded tail slots write to the trash page and their logits are
-    garbage the caller must ignore. Returns (logits (B,T,V), new state
-    with ``pos`` UNCHANGED — acceptance/rollback bookkeeping is the
+    garbage the caller must ignore. ``logits_at`` (B,): return only
+    that position's logits, (B,1,V) — what a prefill chunk wants; spec
+    verify keeps the full (B,T,V). Returns (logits, new state with
+    ``pos`` UNCHANGED — acceptance/rollback bookkeeping is the
     caller's: accepted tokens advance the position frontier, rejected
     ones are simply never covered by it)."""
     pos = state["pos"]
@@ -233,6 +286,7 @@ def lm_decode_span_paged(params: Dict[str, Any], tokens: Array,
         return x, np_
 
     x, new_pages = jax.lax.scan(body, x, (params["blocks"], state["pages"]))
+    x = _span_logits_slice(x, logits_at)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = _logits(params, x, cfg, ctx)
     return logits, {"pages": new_pages, "page_table": table, "pos": pos}

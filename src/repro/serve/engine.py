@@ -10,9 +10,17 @@ plug into without changing the architecture:
     slots refill without flushing the batch.
   * **Block/paged KV cache** (kv_cache.py): pure-attention stacks store
     KV in a shared page pool addressed through a device page table, with
-    int8 page quantization as the HBM lever; other families (Mamba/RWKV/
-    enc-dec) use per-slot dense ring/state caches behind the same
-    interface.
+    int8 page quantization as the HBM lever — quantized pages stream
+    natively through the Pallas kernels (in-VMEM dequant via page-
+    aligned scale pages); other families (Mamba/RWKV/enc-dec) use
+    per-slot dense ring/state caches behind the same interface.
+  * **Chunked prefill**: cold prompts prefill in fixed-size spans
+    (``prefill_chunk``) through the same span-decode datapath as
+    cached-suffix prefill — one compiled program family for every
+    prompt length, prefill compute scaling with the prompt instead of
+    the window. Hybrid (attention + state) stacks get the same through
+    the *dense* span path (``api.decode_span_fn``): right-aligned
+    chunks at absolute positions, recurrent state threading through.
   * **Prefix caching** (kv_cache.py): full prompt pages are content-
     addressed in a global LRU index; admissions that hit share the cached
     pages by reference (copy-on-write protected) and prefill only the
@@ -66,7 +74,9 @@ class ServeEngine:
 
     ``draft_k``: speculative draft length per decode step (0 disables;
     requires the paged backend). ``prefix_cache``: share prompt-prefix
-    pages across requests (None -> on whenever paged)."""
+    pages across requests (None -> on whenever paged).
+    ``prefill_chunk``: span size for chunked prefill (clamped to the
+    window; the final partial chunk buckets to pow2)."""
 
     cfg: ModelConfig
     ctx: ModelContext
@@ -80,6 +90,7 @@ class ServeEngine:
     temperature: float = 0.0
     draft_k: int = 0
     prefix_cache: Optional[bool] = None
+    prefill_chunk: int = 128  # span size for chunked prefill
 
     def __post_init__(self) -> None:
         cfg, ctx = self.cfg, self.ctx
@@ -100,7 +111,10 @@ class ServeEngine:
                          "host_syncs": 0, "pertoken_steps": 0,
                          "pages_trimmed": 0, "suffix_prefills": 0,
                          "prompt_tokens": 0, "cached_prompt_tokens": 0,
-                         "spec_steps": 0, "spec_tokens": 0}
+                         "spec_steps": 0, "spec_tokens": 0,
+                         "prefill_span_calls": 0,
+                         "span_prefill_compiles": 0,
+                         "span_prefill_dense_compiles": 0}
         if self.paged:
             # +1 page of table headroom: a finished slot's frozen pos can
             # sit exactly at `window`, whose page index must still resolve
@@ -109,21 +123,12 @@ class ServeEngine:
             # frontier; those slots must resolve (to trash) too.
             self.pages_per_seq = (
                 -(-(self.window + self.draft_k) // self.page_size) + 1)
-            self.prefill_len = self.pages_per_seq * self.page_size
             if self.num_pages is None:
                 self.num_pages = 1 + self.max_batch * self.pages_per_seq
-            # prefill computes fp caches at absolute slots (no SWA ring);
-            # quantization happens on page write
-            self._prefill_ctx = ModelContext(
-                compute_dtype=ctx.compute_dtype, q_chunk=ctx.q_chunk,
-                shard=ctx.shard, mamba_chunk=ctx.mamba_chunk,
-                rwkv_chunk=ctx.rwkv_chunk, attn_impl=ctx.attn_impl,
-                full_cache_window=True)
             self.kv: Any = PagedKVCache(
                 cfg, ctx, self.num_pages, self.page_size, self.max_batch,
                 self.pages_per_seq)
         else:
-            self._prefill_ctx = ctx
             self.kv = DenseKVCache(cfg, ctx, self.window, self.max_batch)
         # Pure state-family stacks (mamba/rwkv) carry O(1) state, so the
         # dense prefill would otherwise compile once per prompt length.
@@ -134,8 +139,23 @@ class ServeEngine:
                                and not cfg.is_encoder_decoder
                                and set(cfg.sublayer_kinds()) <=
                                {"mamba", "rwkv"})
+        # Chunked prefill through the dense span path for any remaining
+        # decoder-only stack with attention sublayers (hybrid jamba, or a
+        # pure-attention stack forced onto the dense backend): prompts
+        # are right-aligned into fixed-size spans at absolute positions,
+        # so attention needs no front padding and every prompt length
+        # reuses ONE compiled program. Requires append-only (non-ring)
+        # caches, so SWA archs whose window exceeds the serve window are
+        # excluded, as is mrope (its positions arrive as extras).
+        self.chunk_prefill = (not self.paged
+                              and not self.bucket_prefill
+                              and not cfg.is_encoder_decoder
+                              and cfg.pos_emb != "mrope"
+                              and (cfg.sliding_window is None
+                                   or self.window <= cfg.sliding_window))
+        # span size for chunked prefill (paged cold + suffix, dense)
+        self.span_len = max(1, min(self.prefill_chunk, self.window))
         self.prefill_bucket_sizes: set = set()
-        self.suffix_bucket_sizes: set = set()
         self._use_spec = False  # per-run: draft_k > 0 and greedy temp
         self._build_jitted()
         self._reset_carry()
@@ -203,13 +223,6 @@ class ServeEngine:
         eos = self.eos_id
 
         # ---- prefill ----------------------------------------------------
-        def prefill_paged(params, tokens, n_valid, key, temp):
-            logits, cache = api.prefill_fn(
-                params, {"tokens": tokens}, cfg, self._prefill_ctx,
-                window=self.prefill_len, logits_at=n_valid[None] - 1)
-            first = self._pick(logits, key, temp)
-            return first, cache["blocks"]
-
         def prefill_dense(params, batch, key, temp):
             logits, cache = api.prefill_fn(params, batch, cfg, ctx,
                                            window=self.window)
@@ -223,28 +236,52 @@ class ServeEngine:
             first = self._pick(logits, key, temp)
             return first, cache
 
-        self._prefill_paged = jax.jit(prefill_paged)
         self._prefill_dense = jax.jit(prefill_dense)
         self._prefill_bucketed = jax.jit(prefill_bucketed)
 
-        # ---- suffix prefill behind a cached prefix ----------------------
-        # The suffix rides the span-decode datapath: its queries attend to
-        # the adopted prefix pages through the page table, its k/v scatter
-        # into the slot's private pages, and only the suffix is computed.
+        # ---- span prefill (paged): cold chunks AND cached suffixes ------
+        # Every paged prefill rides the span-decode datapath in fixed-size
+        # chunks: queries attend to everything already in the pages (a
+        # cold chunk's predecessors, or an adopted cached prefix) through
+        # the page table, and the chunk's k/v scatter straight into the
+        # slot's pages — quantized on write for int8 pools, streamed back
+        # by the same kernels decode uses. One compiled program serves
+        # every prompt length (the trace-time counter below is the
+        # compile-count regression probe).
         def prefill_span(params, pages, span, table, pos0, valid, key,
                          temp):
+            self.counters["span_prefill_compiles"] += 1  # trace-time
             state = {"pages": pages, "page_table": table, "pos": pos0}
-            logits, new_state = api.decode_span_paged_fn(
-                params, span, state, cfg, ctx, valid=valid)
+            # only the chunk's last real token needs logits: the gather
+            # happens before the lm head, so the vocab projection is
+            # (1, 1, V) per chunk, not (1, span, V)
             idx = jnp.clip(valid - 1, 0, span.shape[1] - 1)
-            last = jnp.take_along_axis(
-                logits, jnp.broadcast_to(
-                    idx[:, None, None],
-                    (logits.shape[0], 1, logits.shape[2])), axis=1)
-            first = self._pick(last, key, temp)
+            logits, new_state = api.decode_span_paged_fn(
+                params, span, state, cfg, ctx, valid=valid, logits_at=idx)
+            first = self._pick(logits, key, temp)
             return first, new_state["pages"]
 
         self._prefill_span = jax.jit(prefill_span, donate_argnums=(1,))
+
+        # ---- span prefill (dense): chunked prefill for hybrid stacks ----
+        # Right-aligned chunks at absolute positions: only the FIRST chunk
+        # carries (dead) front padding, flagged by pos < 0 inside
+        # lm_decode_span — attention writes drop, recurrent state threads
+        # through chunks untouched by the pad.
+        def prefill_span_dense(params, cache, span, pos0, key, temp):
+            self.counters["span_prefill_dense_compiles"] += 1  # trace-time
+            state = dict(cache)
+            state["pos"] = pos0
+            # right-aligned chunks end on a live token: its logits alone
+            # are gathered before the lm head (see prefill_span)
+            last = jnp.full((span.shape[0],), span.shape[1] - 1, jnp.int32)
+            logits, new_state = api.decode_span_fn(
+                params, span, state, cfg, ctx, logits_at=last)
+            first = self._pick(logits, key, temp)
+            return first, {"blocks": new_state["blocks"]}
+
+        self._prefill_span_dense = jax.jit(prefill_span_dense,
+                                           donate_argnums=(1,))
 
         # ---- copy-on-write page copy (prefix cache fork) ----------------
         def copy_page(pages, src, dst):
@@ -255,27 +292,6 @@ class ServeEngine:
             return new
 
         self._copy_page = jax.jit(copy_page, donate_argnums=(0,))
-
-        # ---- paged page write -------------------------------------------
-        from repro.models.blocks import paged_quantize
-
-        def write_pages(pages, blocks, row):
-            m, p = self.pages_per_seq, self.page_size
-            new = {}
-            for sl, sub in pages.items():
-                new[sl] = dict(sub)
-                for name in ("k", "v"):
-                    dense = blocks[sl][name]  # (L, 1, M*P, KV, D) fp
-                    lyr = dense.shape[0]
-                    dp = dense.reshape(lyr, m, p, *dense.shape[3:])
-                    q, scale = paged_quantize(dp, ctx.cache_dtype)
-                    new[sl][name] = sub[name].at[:, row].set(q)
-                    if scale is not None:
-                        new[sl][name + "_scale"] = \
-                            sub[name + "_scale"].at[:, row].set(scale)
-            return new
-
-        self._write_pages = jax.jit(write_pages, donate_argnums=(0,))
 
         # ---- dense slot write -------------------------------------------
         def write_dense(cache, row_cache, slot):
@@ -422,6 +438,72 @@ class ServeEngine:
             self._hist = jnp.zeros(
                 (b, self.window + self.draft_k + 1), jnp.int32)
 
+    @staticmethod
+    def _pow2_bucket(t: int, cap: int) -> int:
+        """Compile length for a partial span: pow2 >= t (floor 4), capped
+        at the full span size — the program *family* is O(log span_len),
+        constant in prompt length, and a short suffix never pays a
+        full-span query block."""
+        return min(cap, max(4, 1 << (t - 1).bit_length()))
+
+    def _span_prefill_paged(self, params, slot: int, tokens: np.ndarray,
+                            start: int, key: Array, temp: Array) -> Array:
+        """Prefill ``tokens`` at absolute positions ``start..`` through
+        the span-decode datapath in fixed-size chunks — cold prompts
+        (start=0) and cached-prefix suffixes (start=cached) share the
+        same compiled program family (full-span program + pow2 buckets
+        for the final partial chunk). Back padding inside a partial
+        chunk writes to the trash page; logits index the final real
+        token."""
+        s_len = self.span_len
+        if not self.kv.ensure_private(slot, start, self._copy_page):
+            raise RuntimeError("page pool exhausted during CoW fork")
+        first = None
+        i = 0
+        while i < len(tokens):
+            t = min(s_len, len(tokens) - i)
+            b_len = self._pow2_bucket(t, s_len)
+            span = np.zeros((1, b_len), np.int32)
+            span[0, :t] = tokens[i:i + t]
+            first, self.kv.pages = self._prefill_span(
+                params, self.kv.pages, jnp.asarray(span),
+                self.kv.table_row(slot),
+                jnp.full((1,), start + i, jnp.int32),
+                jnp.full((1,), t, jnp.int32), key, temp)
+            self.counters["prefill_span_calls"] += 1
+            i += t
+        return first
+
+    def _span_prefill_dense(self, params, slot: int, tokens: np.ndarray,
+                            key: Array, temp: Array) -> Array:
+        """Chunked prefill on the dense backend (hybrid stacks): the
+        prompt is RIGHT-aligned into fixed-size spans so only the first
+        chunk is (front-)padded — dead positions sit at negative absolute
+        positions, attention stays absolute-positioned, and recurrent
+        state threads through the chunks. The first (partial) chunk
+        buckets to pow2; every other chunk reuses the full-span program."""
+        s_len = self.span_len
+        s = len(tokens)
+        r = s % s_len or min(s, s_len)  # first (partial) chunk tokens
+        b0 = self._pow2_bucket(r, s_len)
+        pad = b0 - r
+        padded = np.zeros((1, pad + s), np.int32)
+        padded[0, pad:] = tokens
+        cache = {"blocks": jax.tree.map(
+            lambda sd: jnp.zeros(sd.shape, sd.dtype),
+            api.cache_spec(self.cfg, 1, self.window, self.ctx)["blocks"])}
+        first = None
+        i = 0
+        while i < padded.shape[1]:
+            b_len = b0 if i == 0 else s_len
+            first, cache = self._prefill_span_dense(
+                params, cache, jnp.asarray(padded[:, i:i + b_len]),
+                jnp.full((1,), i - pad, jnp.int32), key, temp)
+            self.counters["prefill_span_calls"] += 1
+            i += b_len
+        self.kv.write_prefill(self._write_dense, slot, cache)
+        return first
+
     def _admit_into_slot(self, params, req: Request, slot: int,
                          key: Array, temp: Array) -> None:
         rp = req.resume_prompt()
@@ -429,29 +511,15 @@ class ServeEngine:
         self.counters["prefills"] += 1
         pkey = self._prefill_key(key, req.rid)
         cached = req.cached_prefix_len if self.paged else 0
-        if self.paged and cached > 0:
-            # prefix hit: prefill only the suffix through the span-decode
-            # datapath (queries see the adopted pages via the table)
-            suffix = rp[cached:]
-            t = len(suffix)
-            tb = max(4, 1 << (t - 1).bit_length())  # pow2 bucket
-            self.suffix_bucket_sizes.add(tb)
-            span = np.zeros((1, tb), np.int32)
-            span[0, :t] = suffix
-            if not self.kv.ensure_private(slot, cached, self._copy_page):
-                raise RuntimeError("page pool exhausted during CoW fork")
-            first, self.kv.pages = self._prefill_span(
-                params, self.kv.pages, jnp.asarray(span),
-                self.kv.table_row(slot),
-                jnp.full((1,), cached, jnp.int32),
-                jnp.full((1,), t, jnp.int32), pkey, temp)
-            self.counters["suffix_prefills"] += 1
-        elif self.paged:
-            padded = np.full((1, self.prefill_len), 0, np.int32)
-            padded[0, :s] = rp
-            first, blocks = self._prefill_paged(
-                params, jnp.asarray(padded), jnp.int32(s), pkey, temp)
-            self.kv.write_prefill(self._write_pages, slot, blocks)
+        if self.paged:
+            # every paged prefill is a chunked span prefill; a prefix hit
+            # just starts past the adopted pages (suffix-only compute)
+            first = self._span_prefill_paged(params, slot, rp[cached:],
+                                             cached, pkey, temp)
+            if cached > 0:
+                self.counters["suffix_prefills"] += 1
+        elif self.chunk_prefill and not req.extras:
+            first = self._span_prefill_dense(params, slot, rp, pkey, temp)
         elif self.bucket_prefill and not req.extras:
             sb = 1 << max(3, (s - 1).bit_length())  # pow2 >= s, floor 8
             self.prefill_bucket_sizes.add(sb)

@@ -9,8 +9,11 @@ Two memory layouts behind one slot-oriented interface:
     device-resident page table. Page 0 is a reserved *trash page*: padded
     table entries point at it, so scatter/gather with padded tables stays
     branch-free on device. The pool dtype is a quantization hook —
-    ``int8`` stores per-(token, head) scales alongside the pages (the
-    Ironwood int8-KV memory lever; ~2x more resident requests per HBM).
+    ``int8`` stores per-(token, head) bf16 scales in page-aligned scale
+    pages ``(N, P, KV)`` that stream through the same page table as the
+    KV pages, so the Pallas kernels dequantize in VMEM (the Ironwood
+    int8-KV memory lever; ~2x more resident requests per HBM, gated at
+    >= 1.5x in bench_serve).
 
     On top of the pool sits **prefix caching** (serving millions of users
     means most traffic shares prompt prefixes — system prompts, few-shot
@@ -111,7 +114,8 @@ class PagedKVCache:
         self._evictable: Dict[int, None] = {}
         self.counters = {"prefix_lookups": 0, "prefix_hit_tokens": 0,
                          "pages_shared": 0, "pages_forked": 0,
-                         "pages_evicted": 0, "pages_published": 0}
+                         "pages_evicted": 0, "pages_published": 0,
+                         "pages_allocated": 0}
 
     # ---------------------------------------------------------- allocation
 
@@ -151,6 +155,7 @@ class PagedKVCache:
         pid = self._free.pop() if self._free else self._evict_lru()
         if pid is not None:
             self._ref[pid] = 1
+            self.counters["pages_allocated"] += 1
         return pid
 
     def _drop_ref(self, pid: int) -> None:
@@ -329,14 +334,28 @@ class PagedKVCache:
         return {"pages": self.pages, "page_table": self.table_device(),
                 "pos": pos}
 
-    def write_prefill(self, write_fn, slot: int,
-                      prefill_cache: PyTree) -> None:
-        """Scatter a single-request dense prefill cache into this slot's
-        pages via the jitted ``write_fn`` (built by the engine). Table
-        entries beyond the slot's allocation are 0, so the padded tail of
-        the prefill lands in the trash page."""
-        row = jnp.asarray(self._table[slot])
-        self.pages = write_fn(self.pages, prefill_cache, row)
+    # ---------------------------------------------------------- accounting
+
+    def per_token_bytes(self) -> int:
+        """HBM bytes held per cached token across all layers (k + v pages
+        plus int8 scale pages when quantized) — the decode roofline's
+        bytes/token term, and the denominator of resident-batch capacity."""
+        total = sum(leaf.dtype.itemsize * leaf.size
+                    for leaf in jax.tree.leaves(self.pages))
+        return total // (self.num_pages * self.page_size)
+
+    def dedup_stats(self) -> Dict[str, int]:
+        """Cross-request prefix-cache dedup accounting: every shared page
+        reference is one page of prefill compute AND one page of HBM that
+        was never spent. ``pages_unique`` counts every pool allocation in
+        the measurement window (prompt, decode headroom, CoW forks) —
+        callers bounding a window zero both counters first (bench_serve
+        does before its timed run)."""
+        shared = int(self.counters["pages_shared"])
+        unique = int(self.counters["pages_allocated"])
+        return {"pages_shared": shared, "pages_unique": unique,
+                "bytes_saved": shared * self.page_size *
+                self.per_token_bytes()}
 
 
 @dataclasses.dataclass

@@ -1,0 +1,289 @@
+"""Quantization-native paged attention + chunked span prefill (PR 4):
+int8 pages streamed through the scalar-prefetch kernels (in-VMEM
+dequant) vs the gather-dequant oracle, chunked cold prefill vs the
+dense full prefill on attention and hybrid (jamba) archs, and the
+compile-count contract (varying prompt lengths -> one program)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_smoke
+from repro.kernels import ops
+from repro.models import api
+from repro.models.blocks import ModelContext, paged_quantize
+from repro.models.params import init_params
+from repro.serve.engine import ServeEngine
+from repro.serve.scheduler import Request
+
+jax.config.update("jax_default_matmul_precision", "highest")
+
+CTX = ModelContext(compute_dtype=jnp.float32, q_chunk=64, mamba_chunk=8,
+                   rwkv_chunk=4)
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = get_smoke("qwen2_0_5b")
+    params = init_params(jax.random.key(0), api.model_specs(cfg))
+    return cfg, params
+
+
+def _int8_pages(key, n, p, kv, d):
+    """Random fp pages quantized per-(token, head) into (pages, scales)."""
+    x = jax.random.normal(key, (n, p, kv, d)) * 2.0
+    q, s = paged_quantize(x, jnp.int8)
+    return q, s, (q.astype(jnp.float32) * s[..., None])
+
+
+# ------------------------------------------------ int8 kernel parity
+
+
+def test_int8_paged_decode_kernel_matches_dequant_oracle():
+    """GQA + sliding window sweep: the int8 page stream (in-VMEM dequant)
+    must match the gather-dequant oracle bit-for-bit in fp32 tolerance —
+    the kernel reads half the bytes but the math is identical."""
+    key = jax.random.key(0)
+    b, h, kv, d, p, m, n = 3, 8, 2, 32, 8, 4, 16
+    q = jax.random.normal(jax.random.fold_in(key, 1), (b, h, d))
+    kp, ks, kf = _int8_pages(jax.random.fold_in(key, 2), n, p, kv, d)
+    vp, vs, vf = _int8_pages(jax.random.fold_in(key, 3), n, p, kv, d)
+    table = jnp.array([[1, 2, 3, 0], [4, 5, 0, 0], [6, 7, 8, 9]],
+                      jnp.int32)
+    pos = jnp.array([19, 9, 31], jnp.int32)
+    for window in (None, 7):
+        out = ops.paged_decode_attention(
+            q, kp, vp, table, pos, k_scale=ks, v_scale=vs,
+            impl="interpret", window=window)
+        want = ops.paged_decode_attention(
+            q, kp, vp, table, pos, k_scale=ks, v_scale=vs,
+            impl="ref", window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+        # the ref path itself must equal the fp kernel on dequantized pages
+        fp = ops.paged_decode_attention(q, kf, vf, table, pos,
+                                        impl="interpret", window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(fp),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_int8_paged_span_kernel_matches_dequant_oracle():
+    """Same contract for the k-token span kernel (speculative verify /
+    chunked prefill): int8 scale pages ride the same table entry."""
+    key = jax.random.key(7)
+    b, t, h, kv, d, p, m, n = 2, 4, 8, 2, 32, 8, 4, 12
+    q = jax.random.normal(jax.random.fold_in(key, 1), (b, t, h, d))
+    kp, ks, _ = _int8_pages(jax.random.fold_in(key, 2), n, p, kv, d)
+    vp, vs, _ = _int8_pages(jax.random.fold_in(key, 3), n, p, kv, d)
+    table = jnp.array([[1, 2, 3, 0], [4, 5, 6, 7]], jnp.int32)
+    pos = jnp.array([13, 22], jnp.int32)
+    for window in (None, 7):
+        out = ops.paged_decode_span_attention(
+            q, kp, vp, table, pos, k_scale=ks, v_scale=vs,
+            impl="interpret", window=window)
+        want = ops.paged_decode_span_attention(
+            q, kp, vp, table, pos, k_scale=ks, v_scale=vs,
+            impl="ref", window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_int8_span_model_level_matches_oracle_engine_path(qwen):
+    """Model-level: one int8 span decode through the Pallas kernel equals
+    the same call through the jnp gather-dequant oracle."""
+    cfg, params = qwen
+    ctx8k = ModelContext(compute_dtype=jnp.float32, q_chunk=64,
+                         decode_cache_dtype=jnp.int8,
+                         attn_impl="pallas_interpret")
+    ctx8 = ModelContext(compute_dtype=jnp.float32, q_chunk=64,
+                        decode_cache_dtype=jnp.int8)
+    b, p_, m, n = 2, 8, 4, 16
+    rng = np.random.default_rng(3)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, 5)), jnp.int32)
+    table = jnp.array([[1, 2, 3, 0], [4, 5, 6, 0]], jnp.int32)
+    outs = []
+    for ctx in (ctx8k, ctx8):
+        spec = api.paged_state_spec(cfg, n, p_, b, m, ctx)
+        pages = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                             spec)["pages"]
+        st = {"pages": pages, "page_table": table,
+              "pos": jnp.zeros((b,), jnp.int32)}
+        logits, st = api.decode_span_paged_fn(params, toks, st, cfg, ctx)
+        outs.append(np.asarray(logits))
+    np.testing.assert_allclose(outs[0], outs[1], rtol=2e-4, atol=2e-4)
+
+
+# --------------------------------------- chunked prefill (paged, attn)
+
+
+def test_chunked_prefill_logit_parity_attention(qwen):
+    """Chunked span prefill must reproduce the dense full prefill's
+    last-token logits (pure-attention arch, multiple chunks): prompt
+    pages hold identical KV whichever path wrote them."""
+    cfg, params = qwen
+    rng = np.random.default_rng(4)
+    s, span, p_ = 21, 8, 4
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, s)), jnp.int32)
+    # dense full prefill oracle
+    want, _ = api.prefill_fn(params, {"tokens": prompt}, cfg, CTX,
+                             window=32)
+    # chunked span prefill over zero pages with an identity-ish table
+    n, m = 10, 8
+    spec = api.paged_state_spec(cfg, n, p_, 1, m, CTX)
+    pages = jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype),
+                         spec)["pages"]
+    table = jnp.arange(1, m + 1, dtype=jnp.int32)[None, :]
+    logits = None
+    for i in range(0, s, span):
+        chunk = np.zeros((1, span), np.int32)
+        t = min(span, s - i)
+        chunk[0, :t] = np.asarray(prompt[0, i:i + t])
+        st = {"pages": pages, "page_table": table,
+              "pos": jnp.full((1,), i, jnp.int32)}
+        logits, st = api.decode_span_paged_fn(
+            params, jnp.asarray(chunk), st, cfg, CTX,
+            valid=jnp.full((1,), t, jnp.int32))
+        pages = st["pages"]
+        last = logits[:, t - 1:t]
+    np.testing.assert_allclose(np.asarray(last), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_engine_cold_prompts_share_constant_prefill_programs(qwen):
+    """Compile-count contract: cold prompts of varying lengths (and
+    cached-suffix re-runs) ride a constant program family — the full
+    span program plus pow2 buckets for the final partial chunk, at most
+    log2(span_len) programs no matter how many lengths are served."""
+    cfg, params = qwen
+    eng = ServeEngine(cfg, CTX, window=64, max_batch=2, chunk=4,
+                      page_size=8, prefill_chunk=16)
+    rng = np.random.default_rng(5)
+    ps = [rng.integers(0, cfg.vocab_size, int(n))
+          for n in (5, 9, 17, 23, 31)]
+    out = eng.run(params, [Request(rid=i, prompt=p, max_new=6)
+                           for i, p in enumerate(ps)])
+    compiled = eng.counters["span_prefill_compiles"]
+    assert compiled <= 3  # buckets {4, 8, 16} for span_len 16
+    # new lengths + a suffix re-run: every bucket is already compiled
+    more = [rng.integers(0, cfg.vocab_size, int(n))
+            for n in (6, 11, 19, 27)]
+    eng.run(params, [Request(rid=i, prompt=p, max_new=6)
+                     for i, p in enumerate(more)])
+    eng.run(params, [Request(rid=0, prompt=ps[-1], max_new=6)])
+    assert eng.counters["span_prefill_compiles"] == compiled
+    assert eng.counters["prefill_span_calls"] >= len(ps) + len(more) + 1
+    solo = ServeEngine(cfg, CTX, window=64, max_batch=1, chunk=4,
+                       page_size=8, prefix_cache=False)
+    for i, p in enumerate(ps):
+        want = solo.run(params, [Request(rid=0, prompt=p, max_new=6)])[0]
+        np.testing.assert_array_equal(out[i], want)
+
+
+def test_engine_chunked_prefill_swa_arch():
+    """Chunked prefill composes with sliding-window masking (mixtral):
+    span queries honor the window and the result matches the per-token
+    oracle."""
+    cfg = get_smoke("mixtral_8x22b")
+    assert cfg.sliding_window is not None
+    params = init_params(jax.random.key(0), api.model_specs(cfg))
+    eng = ServeEngine(cfg, CTX, window=48, max_batch=2, chunk=4,
+                      page_size=4, prefill_chunk=8)
+    rng = np.random.default_rng(6)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (2, 14)), jnp.int32)}
+    out = eng.generate(params, batch, max_new=10)
+    ref = eng.generate_pertoken(params, batch, max_new=10)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+# --------------------------------------- chunked prefill (dense, jamba)
+
+
+def test_jamba_chunked_prefill_logit_parity():
+    """Hybrid stack (attention + mamba + moe): the dense span path's
+    chunked prefill must reproduce the full prefill's last-token logits —
+    recurrent state threads through chunks, attention stays absolute."""
+    cfg = get_smoke("jamba_v01_52b")
+    params = init_params(jax.random.key(0), api.model_specs(cfg))
+    rng = np.random.default_rng(7)
+    s, span, window = 13, 4, 24
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, s)), jnp.int32)
+    want, _ = api.prefill_fn(params, {"tokens": prompt}, cfg, CTX,
+                             window=window)
+    n_c = -(-s // span)
+    pad = n_c * span - s
+    padded = np.zeros((1, n_c * span), np.int32)
+    padded[0, pad:] = np.asarray(prompt[0])
+    cache = jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype),
+                         api.cache_spec(cfg, 1, window, CTX))
+    logits = None
+    for i in range(n_c):
+        cache["pos"] = jnp.full((1,), i * span - pad, jnp.int32)
+        logits, cache = api.decode_span_fn(
+            params, jnp.asarray(padded[:, i * span:(i + 1) * span]),
+            cache, cfg, CTX)
+    np.testing.assert_allclose(np.asarray(logits[:, -1:]),
+                               np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_jamba_engine_constant_prefill_programs_and_parity():
+    """Engine-level jamba: varying prompt lengths share a constant dense
+    span program family (full span + pow2 first-chunk buckets) and match
+    the per-token oracle exactly."""
+    cfg = get_smoke("jamba_v01_52b")
+    params = init_params(jax.random.key(0), api.model_specs(cfg))
+    eng = ServeEngine(cfg, CTX, window=32, max_batch=2, chunk=4,
+                      prefill_chunk=8)
+    assert not eng.paged and eng.chunk_prefill
+    rng = np.random.default_rng(8)
+    ps = [rng.integers(0, cfg.vocab_size, n) for n in (7, 11, 13, 18)]
+    out = eng.run(params, [Request(rid=i, prompt=p, max_new=6)
+                           for i, p in enumerate(ps)])
+    compiled = eng.counters["span_prefill_dense_compiles"]
+    assert compiled <= 2  # buckets {4, 8} for span_len 8
+    eng.run(params, [Request(rid=i, prompt=rng.integers(
+        0, cfg.vocab_size, n), max_new=6)
+        for i, n in enumerate((6, 10, 15))])
+    assert eng.counters["span_prefill_dense_compiles"] == compiled
+    for i, p in enumerate(ps):
+        ref = eng.generate_pertoken(
+            params, {"tokens": jnp.asarray(p[None, :])}, max_new=6)
+        np.testing.assert_array_equal(out[i], np.asarray(ref)[0])
+
+
+# ------------------------------------------------------- accounting
+
+
+def test_int8_per_token_bytes_capacity_ratio(qwen):
+    """int8 pools must fit >= 1.5x the resident tokens of bf16 pools in
+    the same HBM (the Ironwood int8-KV lever, scales included)."""
+    cfg, _ = qwen
+    from repro.serve.kv_cache import PagedKVCache
+    ctx16 = ModelContext(compute_dtype=jnp.float32, q_chunk=64,
+                         decode_cache_dtype=jnp.bfloat16)
+    ctx8 = ModelContext(compute_dtype=jnp.float32, q_chunk=64,
+                        decode_cache_dtype=jnp.int8)
+    kv16 = PagedKVCache(cfg, ctx16, num_pages=4, page_size=4, max_batch=1,
+                        max_pages_per_seq=2)
+    kv8 = PagedKVCache(cfg, ctx8, num_pages=4, page_size=4, max_batch=1,
+                       max_pages_per_seq=2)
+    ratio = kv16.per_token_bytes() / kv8.per_token_bytes()
+    assert ratio >= 1.5, ratio
+
+
+def test_dedup_stats_track_shared_pages(qwen):
+    """Cross-request dedup: identical prompts admitted twice report the
+    shared pages and the HBM bytes they saved."""
+    cfg, params = qwen
+    eng = ServeEngine(cfg, CTX, window=48, max_batch=2, chunk=4,
+                      page_size=8)
+    rng = np.random.default_rng(9)
+    p = rng.integers(0, cfg.vocab_size, 17)
+    eng.run(params, [Request(rid=0, prompt=p, max_new=6)])
+    eng.run(params, [Request(rid=0, prompt=p, max_new=6)])
+    stats = eng.kv.dedup_stats()
+    assert stats["pages_shared"] == 2  # two full pages adopted on rerun
+    assert stats["pages_unique"] >= stats["pages_shared"]
+    assert stats["bytes_saved"] == \
+        2 * eng.page_size * eng.kv.per_token_bytes()

@@ -224,9 +224,10 @@ def test_engine_decode_through_pallas_paged_kernel(qwen):
     np.testing.assert_array_equal(np.asarray(ok), np.asarray(oo))
 
 
-def test_engine_pallas_int8_pages_fall_back_to_oracle(qwen):
-    """int8 pages need the dequant path: the kernel route must not crash
-    or change results when cache_dtype is int8."""
+def test_engine_pallas_int8_pages_stream_through_kernel(qwen):
+    """int8 pages stream natively through the scalar-prefetch kernel
+    (in-VMEM dequant via the scale pages) and must reproduce the jnp
+    gather-dequant oracle's greedy tokens exactly."""
     cfg, params = qwen
     ctx8p = ModelContext(compute_dtype=jnp.float32, q_chunk=64,
                          decode_cache_dtype=jnp.int8,

@@ -19,7 +19,7 @@ bench-serve:
 	PYTHONPATH=src python benchmarks/bench_serve.py
 
 bench-fleet:
-	PYTHONPATH=src python -m benchmarks.run --only fleet
+	PYTHONPATH=src python -m benchmarks.run --only fleet --json
 
 serve-demo:
 	PYTHONPATH=src python examples/serve_decode.py

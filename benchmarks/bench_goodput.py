@@ -39,5 +39,8 @@ def run(emit) -> None:
         emit("goodput/replayed_steps", rs["replayed_steps"],
              f"of {rs['executions']} executions "
              f"(ckpt@8: failures 13,21 -> 5+5 replays)")
+        emit("goodput/rescales", rs["rescales"],
+             "real trainer restores at full scale (elastic arm is "
+             "sim-only, see fleet suite)")
     finally:
         shutil.rmtree(tmp, ignore_errors=True)

@@ -43,6 +43,11 @@ def main() -> None:
                     help="write BENCH_<suite>.json per suite run")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
+    if only:
+        unknown = only - set(SUITES)
+        if unknown:
+            ap.error(f"unknown suites {sorted(unknown)}; "
+                     f"have {sorted(SUITES)}")
 
     failures = []
     rows: list = []

@@ -1,10 +1,13 @@
 """A week on an Ironwood pod: four 2K-chip jobs, 16 spare cubes,
-stochastic host failures, SDC screens, OCS reconfigurations — the
-paper's fleet story end to end, with a Chrome trace you can load in
-chrome://tracing or ui.perfetto.dev.
+stochastic host failures, SDC screens, OCS reconfigurations, elastic
+re-scale when spares run out, synchronous checkpoint writes contending
+for the shared filer, and roofline-fed step times — the paper's fleet
+story end to end, with a Chrome trace you can load in chrome://tracing
+or ui.perfetto.dev.
 
   PYTHONPATH=src python examples/fleet_week.py \
-      [--days 7] [--trace /tmp/fleet_week_trace.json]
+      [--days 7] [--trace /tmp/fleet_week_trace.json] \
+      [--scale-policy shrink|queue] [--ckpt-write-s 0] [--roofline]
 """
 
 from __future__ import annotations
@@ -13,7 +16,8 @@ import argparse
 
 from repro.core import hwspec
 from repro.core.sdc import SDCRateModel
-from repro.fleet import FleetConfig, FleetSimulator, JobSpec, PowerModel
+from repro.fleet import (FleetConfig, FleetSimulator, JobSpec, PowerModel,
+                         TrainWorkload, job_spec_from_roofline)
 
 
 def main() -> None:
@@ -21,31 +25,59 @@ def main() -> None:
     ap.add_argument("--days", type=float, default=7.0)
     ap.add_argument("--trace", default="/tmp/fleet_week_trace.json")
     ap.add_argument("--seed", type=int, default=3)
+    ap.add_argument("--scale-policy", choices=("queue", "shrink"),
+                    default="shrink",
+                    help="what starvation does: queue for repairs, or "
+                         "re-scale to a smaller slice (paper arm)")
+    ap.add_argument("--ckpt-write-s", type=float, default=0.0,
+                    help="synchronous checkpoint write stall; co-located "
+                         "writers contend for shared bandwidth (0=async)")
+    ap.add_argument("--roofline", action="store_true",
+                    help="price step times from the roofline "
+                         "(fleet.perf) instead of the 1 s constant")
     args = ap.parse_args()
 
     cfg = FleetConfig(
         tpu="ironwood", total_cubes=144, host_mtbf_hours=2000.0,
         repair_hours=4.0, detect_s=30.0, restore_s=120.0,
+        ckpt_write_s=args.ckpt_write_s,
         sdc=SDCRateModel(rate_per_chip_hour=2e-6, screen_interval_s=600.0,
                          screen_coverage=0.8),
         seed=args.seed)
-    jobs = [JobSpec(name=f"job{i}", chips=2048, total_steps=10**9,
-                    step_time_s=1.0, checkpoint_every_steps=600)
-            for i in range(4)]
+    if args.roofline:
+        # a 70B dense model at a 16M-token global batch; the elastic arm
+        # follows the Ironwood scaling curve when it shrinks
+        wl = TrainWorkload(n_params=70e9, tokens_per_step=4096 * 4096)
+        jobs = [job_spec_from_roofline(
+            f"job{i}", "ironwood", wl, chips=2048, total_steps=10**9,
+            checkpoint_every_steps=600, scale_policy=args.scale_policy,
+            min_cubes=8) for i in range(4)]
+    else:
+        jobs = [JobSpec(name=f"job{i}", chips=2048, total_steps=10**9,
+                        step_time_s=1.0, checkpoint_every_steps=600,
+                        scale_policy=args.scale_policy, min_cubes=8)
+                for i in range(4)]
     sim = FleetSimulator(cfg, jobs)
     sim.run(args.days * 86400.0)
 
     print(f"=== {args.days:g} simulated days on an Ironwood pod "
-          f"(144 cubes, 4 x 2048-chip jobs, 16 spares) ===")
+          f"(144 cubes, 4 x 2048-chip jobs, 16 spares, "
+          f"policy={args.scale_policy}) ===")
     fs = sim.fleet_summary()
     print("fleet:", {k: round(v, 4) for k, v in fs.items()})
     pm = PowerModel(hwspec.get(cfg.tpu))
     for name, job in sim.jobs.items():
         s = job.ledger.summary()
         p = pm.job_summary(job.ledger, job.spec.chips)
+        # rework steps are the sim's replayed_steps: same reading as the
+        # real trainer's replay ledger in launch/train.py output
+        replayed = sum(e.steps for e in job.ledger.events
+                       if e.kind == "rework")
         print(f"  {name}: goodput={s['goodput']:.4f} "
-              f"steps={job.base_step} "
-              f"rework={s['rework_s']:.0f}s restore={s['restore_s']:.0f}s "
+              f"steps={job.base_step} replayed_steps={replayed} "
+              f"rescales={job.rescales} grow_backs={job.grow_backs} "
+              f"cubes={job.cubes}/{job.spec.full_cubes} "
+              f"step_time={job.step_time_s:.2f}s "
               f"energy={p['energy_kwh']:.0f}kWh "
               f"gCO2e/EFLOP={p.get('gco2e_per_eflop', float('nan')):.1f}")
     sim.trace.write(args.trace)

@@ -8,10 +8,16 @@ Verifies that the documentation keeps up with the code:
   2. every relative link and bare file reference in README.md and
      docs/*.md resolves to a real file in the repo;
   3. every ``benchmarks/bench_*.py`` entry point is documented in
-     docs/benchmarks.md.
+     docs/benchmarks.md;
+  4. every backticked dotted module reference (``repro.fleet.perf``,
+     optionally with a trailing attribute or ``::anchor``) resolves to a
+     module under ``src/``;
+  5. every ``--flag`` on a ``python ...`` command line inside a fenced
+     code block appears verbatim in the source of the script/module the
+     command invokes (so documented CLI surfaces can't drift).
 
 Exits non-zero with a report on failure. Wired into scripts/tier1.sh as
-a non-fatal step (docs drift should nag, not block the test gate).
+a *fatal* gate: docs drift blocks the tier-1 verify.
 """
 
 from __future__ import annotations
@@ -27,6 +33,67 @@ def doc_files():
     files = [ROOT / "README.md"]
     files += sorted((ROOT / "docs").glob("*.md"))
     return [f for f in files if f.exists()]
+
+
+def module_ref_resolves(ref: str) -> bool:
+    """``repro.a.b`` -> src/repro/a/b.py or the package src/repro/a/b/.
+
+    A trailing component may be a function/class attribute — but only of
+    a *module* (``repro.core.goodput.modeled_goodput`` is fine because
+    goodput.py exists); a dangling name under a package directory
+    (``repro.fleet.nonexistent``) does not resolve."""
+    parts = ref.split("::", 1)[0].split(".")
+    base = ROOT / "src" / Path(*parts)
+    if base.with_suffix(".py").exists() or base.is_dir():
+        return True
+    prefix = ROOT / "src" / Path(*parts[:-1]) if len(parts) > 1 else None
+    return prefix is not None and prefix.with_suffix(".py").exists()
+
+
+def fenced_blocks(text: str):
+    """Yield the contents of ``` fenced code blocks."""
+    chunks = text.split("```")
+    for i in range(1, len(chunks), 2):
+        body = chunks[i]
+        # drop the info string (first line, e.g. "sh" or "python")
+        yield body.split("\n", 1)[1] if "\n" in body else ""
+
+
+def command_target(tokens) -> Path | None:
+    """The repo file a ``python ...`` command line invokes, if any."""
+    for j, tok in enumerate(tokens):
+        if tok == "-m" and j + 1 < len(tokens):
+            mod = tokens[j + 1]
+            for base in (ROOT, ROOT / "src"):
+                p = base / (mod.replace(".", "/") + ".py")
+                if p.exists():
+                    return p
+            return None
+        if tok.endswith(".py"):
+            p = ROOT / tok
+            return p if p.exists() else None
+    return None
+
+
+def check_cli_flags(doc: Path, problems) -> None:
+    for block in fenced_blocks(doc.read_text()):
+        # join continuation lines so flags after a trailing \ attach to
+        # their command
+        joined = re.sub(r"\\\n\s*", " ", block)
+        for line in joined.splitlines():
+            if "python" not in line:
+                continue
+            tokens = [t.strip("[]()") for t in line.split()]
+            target = command_target(tokens)
+            if target is None:
+                continue
+            src = target.read_text()
+            for tok in tokens:
+                m = re.match(r"(--[A-Za-z][\w-]*)", tok)
+                if m and m.group(1) not in src:
+                    problems.append(
+                        f"{doc.relative_to(ROOT)}: flag {m.group(1)} not "
+                        f"found in {target.relative_to(ROOT)}")
 
 
 def main() -> int:
@@ -73,13 +140,26 @@ def main() -> int:
                 f"benchmarks/{bench.name} is not documented in "
                 f"docs/benchmarks.md")
 
+    # 4) backticked dotted module references resolve under src/
+    mod_re = re.compile(r"`(repro(?:\.\w+)+(?:::[\w.]+)?)`")
+    for f in docs:
+        for m in mod_re.finditer(f.read_text()):
+            if not module_ref_resolves(m.group(1)):
+                problems.append(f"{f.relative_to(ROOT)}: module ref "
+                                f"`{m.group(1)}` does not resolve "
+                                f"under src/")
+
+    # 5) documented CLI flags exist in the script they are shown with
+    for f in docs:
+        check_cli_flags(f, problems)
+
     if problems:
         print("docs-check FAILED:")
         for p in problems:
             print(f"  - {p}")
         return 1
     print(f"docs-check OK: {len(docs)} docs, all packages mentioned, "
-          f"all links resolve")
+          f"all links, module refs and CLI flags resolve")
     return 0
 
 

@@ -4,10 +4,16 @@
 # extra dependencies are required.
 set -e
 cd "$(dirname "$0")/.."
-# docs drift nags but never blocks the test gate
-python scripts/docs_check.py || echo "(docs-check failed; non-fatal)"
+# docs gate: every package documented, every link/module/CLI-flag
+# reference resolves against the tree (fatal since PR 5)
+python scripts/docs_check.py
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 # kernel-routing gate: every paged serving path through the Pallas
 # kernels (interpret mode, fp + int8) must match the jnp oracle engine
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python benchmarks/bench_serve.py --smoke
+# fleet gate: deterministic elastic scenario — the re-scale arm must
+# beat queue-only goodput on the same failure trace, and the simulated
+# checkpoint-interval optimum must match the closed-form search
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python benchmarks/bench_fleet.py --smoke

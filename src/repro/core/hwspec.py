@@ -278,3 +278,25 @@ class RooflineTarget:
 
 
 ROOFLINE_TARGET = RooflineTarget()
+
+
+def roofline_target_for(spec: TPUSpec) -> RooflineTarget:
+    """Per-chip ``RooflineTarget`` built from a Table-1 generation spec.
+
+    Lets the three-term roofline (``core.roofline``) model *any*
+    generation, not just the repo's v5e dry-run target — the fleet
+    simulator's roofline-fed step times (``fleet.perf``) price every
+    generation's step time from its own Table-1 column. ``peak_flops``
+    stays bf16 (training normalization); FP8 peak rides along for parts
+    that support it."""
+    return RooflineTarget(
+        name=spec.name,
+        peak_flops=spec.peak_bf16_tflops * 1e12,
+        peak_flops_fp8=(spec.peak_fp8_tflops or spec.peak_bf16_tflops)
+        * 1e12,
+        hbm_bw=spec.hbm_gbps * 1e9,
+        ici_link_bw=spec.ici_link_gbps * 1e9,
+        ici_links=spec.ici_links,
+        hbm_capacity=spec.hbm_gib * 1024**3,
+        vmem_capacity=spec.vmem_mib * 1024**2,
+    )

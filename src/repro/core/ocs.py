@@ -131,6 +131,51 @@ class OCSPodScheduler:
         for c in alloc.cubes:
             self._cube_owner.pop(c, None)
 
+    # -- elastic re-scale (paper: "rescheduled at smaller scale") ------------
+
+    def max_slice_cubes(self, limit: int) -> int:
+        """Largest schedulable slice size in cubes, capped at ``limit``.
+
+        OCS pods can stitch any idle healthy cubes into a torus, so the
+        answer is simply how many are idle; pre-OCS (contiguous) pods are
+        bounded by the largest free rectangular block. The elastic fleet
+        arm asks this before shrinking a starved job."""
+        idle = len(self.idle_cubes())
+        if not self.contiguous:
+            return min(limit, idle)
+        for n in range(min(limit, idle), 0, -1):
+            if self._find_contiguous_block(n) is not None:
+                return n
+        return 0
+
+    def grow(self, job: str, extra_cubes: int) -> Optional[SliceAllocation]:
+        """Stitch ``extra_cubes`` idle cubes into a live allocation (an OCS
+        reconfiguration — the grow-back half of elastic re-scale). Returns
+        the grown allocation, or None if not enough idle cubes. Pre-OCS
+        pods cannot grow in place: the block would have to stay
+        rectangular, so a full reschedule is required instead."""
+        alloc = self._alloc.get(job)
+        if alloc is None:
+            raise KeyError(job)
+        if extra_cubes <= 0:
+            return alloc
+        if self.contiguous:
+            return None
+        idle = self.idle_cubes()
+        if len(idle) < extra_cubes:
+            return None
+        added = tuple(idle[:extra_cubes])
+        new_cubes = alloc.cubes + added
+        chips = len(new_cubes) * self.cube.chips
+        for c in added:
+            self._cube_owner[c] = job
+        patched = dataclasses.replace(
+            alloc, cubes=new_cubes, chips=chips,
+            cube_dims=cube_grid(chips, self.cube))
+        self._alloc[job] = patched
+        self.reconfig_count += 1
+        return patched
+
     # -- failures & repair ----------------------------------------------------
 
     def fail_cube(self, cube_id: CubeId) -> Optional[str]:

@@ -201,3 +201,46 @@ def model_flops(n_params_active: float, tokens: float,
     """The paper-standard napkin: 6*N*D for a training step (fwd+bwd),
     2*N*D forward-only (prefill/decode)."""
     return (6.0 if training else 2.0) * n_params_active * tokens
+
+
+def synthetic_train_cost(
+    *,
+    n_params_active: float,
+    tokens_global: float,
+    chips: int,
+    param_bytes: float = 2.0,
+    grad_bytes: float = 4.0,
+    traversals: float = 3.0,
+    opt_state_bytes: float = 8.0,
+) -> HloCostReport:
+    """First-order ``HloCostReport`` for an FSDP data-parallel training
+    step, for callers with no compiled dry-run artifact (the fleet's
+    roofline-fed step times, ``fleet.perf``).
+
+    Per device, per step: FLOPs are the 6*N*T napkin split across chips;
+    HBM traffic streams the *gathered* params once per traversal (fwd,
+    remat-fwd, bwd — FSDP re-gathers shards each time, so this term does
+    not shrink with scale) plus gradient and optimizer-state read/write
+    on the shard; the collective is the ring grad all-reduce over the
+    data axis. Deliberately omits activation traffic (model-shape
+    dependent) — see ``core.napkin`` for the shape-aware model."""
+    if chips <= 0:
+        raise ValueError("chips must be positive")
+    flops = 6.0 * n_params_active * tokens_global / chips
+    hbm = traversals * n_params_active * param_bytes \
+        + n_params_active / chips * (2.0 * grad_bytes
+                                     + 2.0 * opt_state_bytes)
+    collectives: List[CollectiveRecord] = []
+    if chips > 1:
+        grad_all_reduce_bytes = n_params_active * grad_bytes
+        collectives.append(CollectiveRecord(
+            opcode="all-reduce", comp="synthetic",
+            result_bytes=grad_all_reduce_bytes,
+            operand_bytes=grad_all_reduce_bytes,
+            group_size=chips, groups=(), multiplier=1.0,
+            axes=("data",)))
+    peak_mem = n_params_active / chips * (param_bytes + opt_state_bytes
+                                          + grad_bytes)
+    return HloCostReport(flops=flops, hbm_bytes=hbm,
+                         collectives=collectives,
+                         peak_memory_bytes=peak_mem)

@@ -9,20 +9,26 @@ reconfigurations, silent-data-corruption rollbacks, and power/carbon
 integration per job.
 """
 
-from repro.fleet.bridge import run_bridge, simulate_trainer_plan
+from repro.fleet.bridge import (GRAMMAR_KINDS, grammar_ok, run_bridge,
+                                simulate_trainer_plan)
 from repro.fleet.events import Event, EventEngine
 from repro.fleet.jobs import (JobRuntime, JobSpec,
                               optimal_checkpoint_interval_s,
                               search_checkpoint_interval)
+from repro.fleet.perf import (StepTimeModel, TrainWorkload,
+                              generation_step_times, job_spec_from_roofline,
+                              sim_checkpoint_interval_sweep)
 from repro.fleet.power import PowerModel, generation_efficiency_table, \
     sustainability_ratios
 from repro.fleet.sim import FleetConfig, FleetSimulator
 from repro.fleet.trace import TraceRecorder
 
 __all__ = [
-    "run_bridge", "simulate_trainer_plan",
+    "GRAMMAR_KINDS", "grammar_ok", "run_bridge", "simulate_trainer_plan",
     "Event", "EventEngine", "JobRuntime", "JobSpec",
     "optimal_checkpoint_interval_s", "search_checkpoint_interval",
+    "StepTimeModel", "TrainWorkload", "generation_step_times",
+    "job_spec_from_roofline", "sim_checkpoint_interval_sweep",
     "PowerModel", "generation_efficiency_table", "sustainability_ratios",
     "FleetConfig", "FleetSimulator", "TraceRecorder",
 ]

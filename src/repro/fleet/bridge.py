@@ -12,6 +12,13 @@ The two goodput ledgers must agree *event-for-event in structure*
 bootstrap idle, step runs, checkpoint marks, detect/restore/rework
 triplets with identical rework step counts). Durations differ by
 construction (measured vs modeled); the grammar must not.
+
+``GRAMMAR_KINDS`` is the pinned vocabulary both sides speak. Elastic
+re-scale and synchronous checkpoint writes extend the *simulator's*
+story, but every new charge stays inside this vocabulary (re-scale
+markers are ``idle``, write stalls are ``idle``, re-scale restores are
+``restore``/``rework``) — ``grammar_ok`` asserts exactly that, so the
+bridge contract survives the elastic arm unchanged.
 """
 
 from __future__ import annotations
@@ -23,6 +30,14 @@ from typing import Dict, Optional
 from repro.core.goodput import GoodputLedger
 from repro.fleet.jobs import JobSpec
 from repro.fleet.sim import FleetConfig, FleetSimulator
+
+# The pinned ledger vocabulary: every event either side ever records.
+GRAMMAR_KINDS = ("steps", "rework", "detect", "restore", "idle")
+
+
+def grammar_ok(ledger: GoodputLedger) -> bool:
+    """True iff every ledger event speaks the pinned five-kind grammar."""
+    return all(e.kind in GRAMMAR_KINDS for e in ledger.events)
 
 # Mirrors launch.train.build_trainer's pod: Ironwood-scale cube count,
 # one 8192-chip job (cubes 0..127), 16 spares.

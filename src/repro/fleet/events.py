@@ -4,9 +4,18 @@ A seeded event heap and nothing else: no wall clock, no threads. Ties in
 time break by insertion order (a monotonically increasing sequence
 number), so two runs with the same seed and the same schedule calls pop
 the exact same event sequence — the determinism property the fleet tests
-pin. Stochastic arrivals (failures, corruptions) draw from the engine's
-``rng``; callers that want a purely deterministic timeline simply never
-touch it.
+pin (and that the elastic re-scale arm inherits: same seed, same
+shrink/grow-back sequence). Stochastic arrivals (failures, corruptions)
+draw from the engine's ``rng``; callers that want a purely deterministic
+timeline simply never touch it.
+
+The simulator's event vocabulary rides this engine unchanged: arrival /
+complete / cube_fail / plan_fail / repair / sdc_corrupt / sdc_detect,
+plus (PR 5) ``ckpt_write`` (synchronous snapshot stalls) and ``install``
+(incremental-deployment waypoints). Stale timelines are invalidated by
+per-job epochs, not cancellation, so the heap may hold superseded
+events; ``cancel`` exists for the few cases (SDC map-out) that must
+retract a pending failure.
 """
 
 from __future__ import annotations

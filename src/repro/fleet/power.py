@@ -10,6 +10,13 @@ fraction while detecting/restoring/queued. Effective FLOPs count only
 effective-FLOP and gCO2e-per-effective-FLOP outputs respond to both the
 hardware generation (perf/W) and the fleet's resilience behavior — the
 paper's sustainability and goodput stories in one number.
+
+Elastic caveat: ``job_summary(ledger, chips)`` integrates at a fixed
+chip count. A job that spent part of its life re-scaled to a smaller
+slice held fewer chips during those segments, so passing its full
+``spec.chips`` bounds energy from above (conservative for the
+sustainability ratios, which are cross-generation and cancel the
+fleet behavior).
 """
 
 from __future__ import annotations

@@ -13,25 +13,47 @@ The executable composition of the paper's resilience story:
        checkpoint *before the corruption* (later snapshots are poisoned)
     -> map out the offending cube;
 
-  no spares -> the job is starved: it releases its slice, queues, and is
-  re-admitted (restore + rework) when a repair or completion frees cubes.
+  no spares -> the paper's two arms, selected per job by
+  ``JobSpec.scale_policy``:
+
+    * ``"queue"``  — the job releases its slice, queues, and is
+      re-admitted (restore + rework) when a repair or completion frees
+      cubes;
+    * ``"shrink"`` — the job is *rescheduled at smaller scale*: it keeps
+      running on the largest schedulable slice >= ``min_cubes``, its step
+      time re-scaled by the job's slice-size curve (roofline-fed via
+      ``fleet.perf``, or ideal-linear), and it grows back to full size
+      opportunistically when repairs or completions free cubes. Every
+      re-scale is ledgered inside the same five-kind grammar the bridge
+      pins (an ``idle`` marker plus the usual restore/rework charges).
+
+Checkpoint writes are free (asynchronous, the repo's
+``CheckpointManager`` behavior) unless ``FleetConfig.ckpt_write_s`` is
+set: then every snapshot stalls the job synchronously, concurrent
+writers contend for the shared filer bandwidth (a write that starts
+while k others are in flight takes (k+1)x the uncontended time), and a
+snapshot only becomes durable when its write *completes* — a failure
+mid-write rolls back to the previous checkpoint.
 
 Progress is step-quantized but simulated analytically — between events a
 job's step count is a closed-form function of time, so a week of
 simulated pod time costs thousands of events, not billions of steps.
 ``contiguous=True`` runs the same fleet against pre-OCS (TPU v2/v3)
 scheduling semantics: no substitution, rectangular-block allocation.
+``install_schedule`` models incremental deployment (paper: each cube
+enters production as soon as it is installed).
 
-docs/fleet.md has the event-flow diagram, the module map, and the table
-of paper anchors (``~97%``/``~93%`` goodput, Ironwood 4x2K-job spares,
-``~29x`` CO2e per effective FLOP) that ``benchmarks/bench_fleet.py``
-reproduces from this simulator.
+docs/fleet.md has the event-flow and elastic state diagrams, the module
+map, and the table of paper anchors (``~97%``/``~93%`` goodput, Ironwood
+4x2K-job spares, ``~29x`` CO2e per effective FLOP, the re-scale-vs-queue
+goodput gap) that ``benchmarks/bench_fleet.py`` reproduces from this
+simulator.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core import hwspec
 from repro.core.ocs import OCSPodScheduler
@@ -51,9 +73,25 @@ class FleetConfig:
     detect_s: float = 30.0
     restore_s: float = 120.0
     reconfig_s: float = 10.0  # OCS substitution latency, folded into restore
+    ckpt_write_s: float = 0.0  # synchronous write stall; 0 = async writes
     sdc: Optional[SDCRateModel] = None
     contiguous: bool = False  # pre-OCS (TPU v2/v3) scheduling semantics
+    # incremental deployment: (sim time, installed cube count) waypoints;
+    # empty = the whole pod is installed from t=0
+    install_schedule: Tuple[Tuple[float, int], ...] = ()
     seed: int = 0
+
+    def __post_init__(self) -> None:
+        if self.ckpt_write_s < 0.0:
+            raise ValueError("ckpt_write_s must be >= 0")
+        last_t, last_n = -1.0, 0
+        for t, n in self.install_schedule:
+            if t < 0.0 or t <= last_t:
+                raise ValueError("install_schedule times must increase")
+            if n < last_n or n > self.total_cubes:
+                raise ValueError("install_schedule counts must be "
+                                 "nondecreasing and <= total_cubes")
+            last_t, last_n = t, n
 
 
 class FleetSimulator:
@@ -70,11 +108,18 @@ class FleetSimulator:
         self.jobs: Dict[str, JobRuntime] = {
             j.name: JobRuntime(spec=j) for j in jobs}
         self.stats = {"cube_failures": 0, "repairs": 0, "starvations": 0,
+                      "rescales": 0, "grow_backs": 0,
                       "sdc_corruptions": 0, "sdc_detections": 0}
         self._fail_ev: Dict[int, Event] = {}
+        self._writes: Dict[str, float] = {}  # job -> in-flight write end
         self._hosts_per_cube = max(1, CUBE.chips // self.spec.tpus_per_host)
         for j in jobs:
             self.engine.schedule_at(j.arrival_s, "arrival", job=j.name)
+        if cfg.install_schedule:
+            # nothing is installed until the first waypoint lands
+            self.sched.set_installed(())
+            for t, n in cfg.install_schedule:
+                self.engine.schedule_at(t, "install", count=n)
         if cfg.host_mtbf_hours is not None:
             for cube in range(cfg.total_cubes):
                 self._schedule_cube_failure(cube)
@@ -91,17 +136,49 @@ class FleetSimulator:
         self._fail_ev[cube] = self.engine.schedule(
             delay, "cube_fail", cube=cube)
 
+    def _settle_ckpt(self, job: JobRuntime, t: float) -> None:
+        """A synchronous snapshot becomes durable only once its write
+        completes; settle the bookkeeping before anything reads
+        ``last_ckpt_step`` at time ``t``."""
+        if job.ckpt_write_end is not None and t >= job.ckpt_write_end:
+            job.last_ckpt_step = job.ckpt_write_step
+            job.ckpt_write_end = None
+
+    def _start_write(self, job: JobRuntime, now: float) -> Tuple[float, int]:
+        """Register a synchronous write against the shared filer: a write
+        starting while k others are in flight takes (k+1)x the
+        uncontended time (already-started writes keep their end times).
+        Returns (stall seconds, concurrent writer count)."""
+        name = job.spec.name
+        self._writes = {j: t for j, t in self._writes.items()
+                        if t > now and j != name}
+        n = len(self._writes) + 1
+        dur = self.cfg.ckpt_write_s * n
+        self._writes[name] = now + dur
+        return dur, n
+
+    def _abort_write(self, job: JobRuntime) -> None:
+        """An in-flight write dies with its slice (failure) or its
+        snapshot (SDC poisoning): it must also stop occupying the shared
+        filer bandwidth later writers contend for."""
+        if job.ckpt_write_end is not None:
+            self._writes.pop(job.spec.name, None)
+            job.ckpt_write_end = None
+
     def _charge_progress(self, job: JobRuntime, target: int) -> None:
         """Record productive steps base_step..target on the ledger, with
         an idle checkpoint mark at every absolute boundary crossed —
         exactly the grammar the ResilientTrainer's main loop produces.
         Boundaries are strictly greater than base_step: a segment that
-        starts at a restored step does not re-snapshot it."""
-        st = job.spec.step_time_s
+        starts at a restored step does not re-snapshot it.
+
+        With synchronous writes (``ckpt_write_s > 0``) boundary marks are
+        event-driven instead (``ckpt_write`` events re-segment the
+        timeline at every boundary), so this only charges whole steps."""
+        st = job.step_time_s
         every = job.spec.checkpoint_every_steps
         cur = job.base_step
         t0 = job.segment_start
-        next_b = (cur // every + 1) * every
 
         def run_steps(upto: int) -> None:
             nonlocal cur, t0
@@ -112,13 +189,15 @@ class FleetSimulator:
                                     args={"steps": f"{cur}..{upto}"})
                 cur, t0 = upto, t0 + k * st
 
-        while next_b <= target:
-            run_steps(next_b)
-            job.ledger.record_idle(0.0, note=f"ckpt @{next_b}")
-            self.trace.duration(job.spec.name, "ckpt", t0, 0.0,
-                                args={"step": next_b})
-            job.last_ckpt_step = next_b
-            next_b += every
+        if self.cfg.ckpt_write_s <= 0.0:
+            next_b = (cur // every + 1) * every
+            while next_b <= target:
+                run_steps(next_b)
+                job.ledger.record_idle(0.0, note=f"ckpt @{next_b}")
+                self.trace.duration(job.spec.name, "ckpt", t0, 0.0,
+                                    args={"step": next_b})
+                job.last_ckpt_step = next_b
+                next_b += every
         run_steps(target)
         job.base_step = cur
         job.segment_start = t0
@@ -128,9 +207,16 @@ class FleetSimulator:
         Bumps the epoch so events from the previous timeline are stale."""
         job.epoch += 1
         spec, e = job.spec, job.epoch
-        st = spec.step_time_s
+        st = job.step_time_s
         t_done = job.segment_start + (spec.total_steps - job.base_step) * st
         self.engine.schedule_at(t_done, "complete", job=spec.name, epoch=e)
+        if self.cfg.ckpt_write_s > 0.0:
+            every = spec.checkpoint_every_steps
+            next_b = (job.base_step // every + 1) * every
+            if next_b < spec.total_steps:
+                t = job.segment_start + (next_b - job.base_step) * st
+                self.engine.schedule_at(t, "ckpt_write", job=spec.name,
+                                        step=next_b, epoch=e)
         planned = job.next_planned_failure()
         if planned is not None and planned[0] >= job.base_step:
             step, cube = planned
@@ -159,17 +245,37 @@ class FleetSimulator:
 
     def _try_admit(self, job: JobRuntime) -> bool:
         now = self.engine.now
-        alloc = self.sched.allocate(job.spec.name, job.spec.chips)
+        spec = job.spec
+        alloc = self.sched.allocate(spec.name, spec.chips)
+        cubes = spec.full_cubes
+        if alloc is None and spec.elastic:
+            # elastic admission: take the largest schedulable slice at or
+            # above the job's floor rather than waiting for full size
+            n = self.sched.max_slice_cubes(spec.full_cubes - 1)
+            if n >= spec.min_cubes:
+                alloc = self.sched.allocate(spec.name, n * CUBE.chips)
+                cubes = n
         if alloc is None:
             if job.state != "queued":
                 job.state = "queued"
                 job.queued_since = now
             return False
         job.alloc = alloc
+        job.set_scale(cubes)
+        if job.first_admitted_at is None:
+            job.first_admitted_at = now
         wait = now - job.queued_since if job.state == "queued" else 0.0
         if wait > 0.0:
             job.ledger.record_idle(wait, note="queued for cubes")
             self.trace.duration(job.spec.name, "queued", now - wait, wait)
+        if cubes < spec.full_cubes:
+            job.rescales += 1
+            self.stats["rescales"] += 1
+            job.ledger.record_idle(
+                0.0, note=f"re-scale to {cubes}/{spec.full_cubes} cubes")
+            self.trace.instant("re-scale", now, {
+                "job": spec.name, "cubes": f"{cubes}/{spec.full_cubes}"})
+        st = job.step_time_s
         if job.pending_resume_step is None:
             # fresh start: the resilience contract's bootstrap snapshot
             job.ledger.record_idle(0.0, note="bootstrap ckpt")
@@ -178,7 +284,6 @@ class FleetSimulator:
             job.segment_start = now
         else:
             rework = job.pending_resume_step - job.last_ckpt_step
-            st = job.spec.step_time_s
             job.ledger.record_restore(self.cfg.restore_s,
                                       note="restore after starvation")
             job.ledger.record_rework(rework * st, steps=rework)
@@ -202,15 +307,128 @@ class FleetSimulator:
         for job in queued:
             self._try_admit(job)
 
+    def _try_grow(self) -> None:
+        """Opportunistic grow-back (elastic jobs only): when capacity
+        frees up — after queued jobs have had their chance — every job
+        running shrunken tries to return to full size. Growth is
+        all-or-nothing (partial regrows would pay the restart cost
+        repeatedly) and graceful: snapshot the current step, re-shard
+        across the grown slice (a restore charge), no rework."""
+        shrunken = sorted((j for j in self.jobs.values() if j.shrunken),
+                          key=lambda j: j.spec.name)
+        for job in shrunken:
+            now = self.engine.now
+            spec = job.spec
+            if job.ckpt_write_end is not None and job.ckpt_write_end > now:
+                continue  # let the in-flight snapshot finish first
+            grown = self.sched.grow(spec.name, spec.full_cubes - job.cubes)
+            if grown is None:
+                continue
+            self._settle_ckpt(job, now)
+            steps_now = job.steps_at(now)
+            self._charge_progress(job, steps_now)
+            # the in-flight step fraction is abandoned by the re-shard:
+            # charge it with the snapshot (it is wall time already spent)
+            # but only the write itself delays the new timeline
+            partial = min(max(now - job.segment_start, 0.0),
+                          job.step_time_s)
+            prev = job.cubes
+            job.alloc = grown
+            job.set_scale(spec.full_cubes)
+            job.grow_backs += 1
+            self.stats["grow_backs"] += 1
+            if self.cfg.ckpt_write_s > 0.0:
+                # the pre-grow snapshot is a synchronous write like any
+                # other: it contends for the filer and is durable only
+                # once it completes
+                write, _ = self._start_write(job, now)
+                job.ckpt_write_end = now + write
+                job.ckpt_write_step = steps_now
+            else:
+                write = 0.0
+                job.last_ckpt_step = steps_now
+            job.ledger.record_idle(write + partial,
+                                   note=f"ckpt @{steps_now} (pre-grow)")
+            restore = self.cfg.reconfig_s + self.cfg.restore_s
+            job.ledger.record_idle(
+                0.0, note=f"re-scale {prev}->{spec.full_cubes} cubes")
+            job.ledger.record_restore(restore, note="grow-back restore")
+            self.trace.instant("re-scale", now, {
+                "job": spec.name,
+                "cubes": f"{prev}->{spec.full_cubes}"})
+            self.trace.duration(spec.name, "restore", now + write, restore)
+            job.base_step = steps_now
+            job.segment_start = now + write + restore
+            self._schedule_segment(job)
+            self.trace.counter("pod", now, {"spare_cubes":
+                                            self.sched.spare_cubes()})
+
     # ------------------------------------------------------------- failures
+
+    def _starve_or_shrink(self, job: JobRuntime, steps_now: int,
+                          note: str) -> None:
+        """No spares for a substitution. The queue arm releases the slice
+        and waits; the elastic arm re-allocates the largest schedulable
+        slice >= min_cubes right away and restores onto it (the paper's
+        "rescheduled at smaller scale"). Both charge restore + rework
+        exactly once — here for the shrink, at re-admission for the
+        queue."""
+        now = self.engine.now
+        cfg = self.cfg
+        spec = job.spec
+        self.sched.release(spec.name)
+        job.alloc = None
+        if spec.elastic:
+            n = self.sched.max_slice_cubes(spec.full_cubes)
+            if n >= spec.min_cubes:
+                prev = job.cubes
+                alloc = self.sched.allocate(spec.name, n * CUBE.chips)
+                assert alloc is not None and len(alloc.cubes) == n
+                job.alloc = alloc
+                job.set_scale(n)
+                job.rescales += 1
+                self.stats["rescales"] += 1
+                st = job.step_time_s
+                restore = cfg.reconfig_s + cfg.restore_s
+                rework = steps_now - job.last_ckpt_step
+                job.ledger.record_idle(
+                    0.0, note=f"re-scale {prev}->{n} cubes")
+                job.ledger.record_restore(restore,
+                                          note=f"re-scale restore ({note})")
+                job.ledger.record_rework(rework * st, steps=rework)
+                t = now + cfg.detect_s
+                self.trace.instant("re-scale", now, {
+                    "job": spec.name, "cubes": f"{prev}->{n}"})
+                self.trace.duration(spec.name, "restore", t, restore)
+                self.trace.duration(spec.name, "rework", t + restore,
+                                    rework * st)
+                job.base_step = steps_now
+                job.segment_start = t + restore + rework * st
+                self._schedule_segment(job)
+                self.trace.counter("pod", now, {"spare_cubes":
+                                                self.sched.spare_cubes()})
+                return
+        # queue arm: only detection is on the books so far; restore +
+        # rework are charged once, at re-admission. The queue clock
+        # starts after the detection window so the charges never overlap.
+        job.pending_resume_step = steps_now
+        job.state = "queued"
+        job.queued_since = now + cfg.detect_s
+        job.epoch += 1  # timeline events are void
+        self.stats["starvations"] += 1
+        self.trace.instant("starved", now, {"job": spec.name})
+        self._admit_queued()  # the freed cubes may fit a smaller job
+        self._try_grow()  # ...or return a shrunken job to full size
 
     def _handle_job_failure(self, job: JobRuntime, cube: int,
                             note: str) -> None:
         now = self.engine.now
         cfg = self.cfg
-        st = job.spec.step_time_s
+        st = job.step_time_s
+        self._settle_ckpt(job, now)
         steps_now = job.steps_at(now)
         self._charge_progress(job, steps_now)
+        self._abort_write(job)  # a write in flight is lost with the slice
         # a stochastic failure lands mid-step: the aborted in-flight
         # fraction is wall time too, folded into the detection charge
         # (zero for planned failures, which fire on step boundaries)
@@ -226,19 +444,8 @@ class FleetSimulator:
             job.sdc_corrupt_step = None
         patched = self.sched.substitute(job.spec.name)
         if patched is None:
-            # no spares (or pre-OCS pod): release and wait for capacity.
-            # Only detection is on the books so far; restore + rework are
-            # charged once, at re-admission. The queue clock starts after
-            # the detection window so the two charges never overlap.
-            self.sched.release(job.spec.name)
-            job.alloc = None
-            job.pending_resume_step = steps_now
-            job.state = "queued"
-            job.queued_since = now + cfg.detect_s
-            job.epoch += 1  # timeline events are void
-            self.stats["starvations"] += 1
-            self.trace.instant("starved", now, {"job": job.spec.name})
-            self._admit_queued()  # the freed cubes may fit a smaller job
+            # no spares (or pre-OCS pod): shrink or queue, per policy
+            self._starve_or_shrink(job, steps_now, note)
             return
         job.alloc = patched
         restore = cfg.reconfig_s + cfg.restore_s
@@ -274,6 +481,7 @@ class FleetSimulator:
         self.trace.instant("job_done", self.engine.now,
                            {"job": job.spec.name})
         self._admit_queued()
+        self._try_grow()
 
     def _on_cube_fail(self, ev: Event) -> None:
         cube = ev["cube"]
@@ -329,6 +537,44 @@ class FleetSimulator:
                 cube not in self._fail_ev:
             self._schedule_cube_failure(cube)
         self._admit_queued()
+        self._try_grow()
+
+    def _on_install(self, ev: Event) -> None:
+        """Incremental deployment waypoint: cubes 0..count-1 are now in
+        production (paper: each cube is usable as soon as installed)."""
+        count = ev["count"]
+        self.sched.set_installed(range(count))
+        self.trace.instant("install", self.engine.now, {"cubes": count})
+        self.trace.counter("pod", self.engine.now,
+                           {"installed_cubes": float(count)})
+        self._admit_queued()
+        self._try_grow()
+
+    def _on_ckpt_write(self, ev: Event) -> None:
+        """Synchronous checkpoint write at an absolute step boundary. The
+        job stalls for the write; concurrent writers contend for the
+        shared filer bandwidth (a write starting while k others are in
+        flight takes (k+1)x the uncontended time — first-order fair
+        share, already-started writes keep their end times). The snapshot
+        becomes durable at write *completion* (see ``_settle_ckpt``)."""
+        job = self.jobs[ev["job"]]
+        if ev["epoch"] != job.epoch or job.state != "running":
+            return
+        now = self.engine.now
+        self._settle_ckpt(job, now)
+        step = ev["step"]
+        self._charge_progress(job, step)
+        dur, n = self._start_write(job, now)
+        job.ledger.record_idle(
+            dur, note=f"ckpt write @{step}"
+            + (f" ({n} writers)" if n > 1 else ""))
+        self.trace.duration(job.spec.name, "ckpt", now, dur,
+                            args={"step": step, "writers": n})
+        self.trace.counter("pod", now, {"ckpt_writers": float(n)})
+        job.ckpt_write_end = now + dur
+        job.ckpt_write_step = step
+        job.segment_start = now + dur
+        self._schedule_segment(job)
 
     def _on_sdc_corrupt(self, ev: Event) -> None:
         job = self.jobs[ev["job"]]
@@ -356,10 +602,12 @@ class FleetSimulator:
             return
         now = self.engine.now
         cfg = self.cfg
-        st = job.spec.step_time_s
+        st = job.step_time_s
         every = job.spec.checkpoint_every_steps
+        self._settle_ckpt(job, now)
         steps_now = job.steps_at(now)
         self._charge_progress(job, steps_now)
+        self._abort_write(job)  # an in-flight snapshot is poisoned too
         # every checkpoint since the corruption is poisoned: roll back to
         # the newest snapshot at or before the corruption step
         rollback = min(job.last_ckpt_step,
@@ -384,17 +632,10 @@ class FleetSimulator:
         self.engine.schedule(cfg.repair_hours * 3600.0, "repair", cube=cube)
         patched = self.sched.substitute(job.spec.name)
         if patched is None:
-            # starved: restore + rework (from the rolled-back snapshot)
-            # are charged once, at re-admission
-            self.sched.release(job.spec.name)
-            job.alloc = None
-            job.pending_resume_step = steps_now
-            job.state = "queued"
-            job.queued_since = now + cfg.detect_s
-            job.epoch += 1
-            self.stats["starvations"] += 1
-            self.trace.instant("starved", now, {"job": job.spec.name})
-            self._admit_queued()
+            # shrink or starve; restore + rework (from the rolled-back
+            # snapshot) are charged by the shrink path now, or once at
+            # re-admission for the queue arm
+            self._starve_or_shrink(job, steps_now, note="sdc map-out")
             return
         job.alloc = patched
         restore = cfg.reconfig_s + cfg.restore_s
@@ -416,6 +657,8 @@ class FleetSimulator:
         "cube_fail": _on_cube_fail,
         "plan_fail": _on_plan_fail,
         "repair": _on_repair,
+        "install": _on_install,
+        "ckpt_write": _on_ckpt_write,
         "sdc_corrupt": _on_sdc_corrupt,
         "sdc_detect": _on_sdc_detect,
     }
@@ -447,12 +690,16 @@ class FleetSimulator:
             s = job.ledger.summary()
             s["state_done"] = float(job.state == "done")
             s["steps_done"] = float(job.base_step)
+            s["cubes"] = float(job.cubes)
+            s["rescales"] = float(job.rescales)
+            s["grow_backs"] = float(job.grow_backs)
             out[name] = s
         return out
 
     def fleet_summary(self) -> Dict[str, float]:
         gp = [j.ledger.goodput for j in self.jobs.values()
               if j.ledger.total_seconds > 0]
+        steps = sum(j.base_step for j in self.jobs.values())
         return {
             **{k: float(v) for k, v in self.stats.items()},
             "ocs_reconfigs": float(self.sched.reconfig_count),
@@ -460,6 +707,7 @@ class FleetSimulator:
             "events_processed": float(self.engine.processed),
             "jobs_done": float(sum(j.state == "done"
                                    for j in self.jobs.values())),
+            "steps_done": float(steps),
             "min_goodput": min(gp) if gp else 1.0,
             "mean_goodput": sum(gp) / len(gp) if gp else 1.0,
         }

@@ -2,10 +2,12 @@
 
 Emits the Trace Event Format JSON that chrome://tracing / Perfetto load
 directly: one process row per job (complete "X" events for train / rework
-/ restore / queued phases, in microseconds) plus a pod-level row of
-instant "i" events for failures, repairs, SDC detections, and OCS
-reconfigurations. The same idea as trace-driven replay tooling
-(byteprofile-style timelines), pointed at fleet state instead of ops.
+/ restore / queued / ckpt-write phases, in microseconds) plus a pod-level
+row of instant "i" events for failures, repairs, SDC detections, OCS
+reconfigurations, elastic re-scales, and install waves, and pod counters
+(spare cubes, installed cubes, concurrent checkpoint writers). The same
+idea as trace-driven replay tooling (byteprofile-style timelines),
+pointed at fleet state instead of ops.
 """
 
 from __future__ import annotations

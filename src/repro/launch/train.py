@@ -92,9 +92,14 @@ def main() -> None:
     carbon.record_step(flops_per_step * len(losses))
     print(f"\ntrained {len(losses)} effective steps in {wall:.1f}s; "
           f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")
-    print("goodput:", {k: round(v, 4)
-                       for k, v in ledger.summary().items()})
-    print("replay:", trainer.replay_summary())
+    rs = trainer.replay_summary()
+    # same key set as the fleet simulator's elastic ledger: rescales is
+    # always 0 here (the trainer restores at full scale; the shrink arm
+    # lives in repro.fleet) — surfaced so the two outputs read alike
+    print("goodput:", {**{k: round(v, 4)
+                          for k, v in ledger.summary().items()},
+                       "rescales": rs["rescales"]})
+    print("replay:", rs)
     print("carbon:", {k: f"{v:.3e}" for k, v in carbon.summary().items()})
 
 

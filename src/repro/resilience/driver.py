@@ -179,11 +179,18 @@ class ResilientTrainer:
     def replay_summary(self) -> Dict[str, int]:
         """Execution counts from the StepRecord ledger: how many
         train_step calls ran in total, how many were replays (rework
-        after a restore), and the effective (non-replayed) count."""
+        after a restore), and the effective (non-replayed) count.
+
+        ``rescales`` keeps the key set aligned with the fleet
+        simulator's elastic ledger (``FleetSimulator.fleet_summary``):
+        the real trainer always restores at full scale — OCS spare
+        substitution, never a smaller slice — so it is constitutionally
+        zero here, and nonzero only in the sim's elastic arm."""
         recs = getattr(self, "records", [])
         replayed = sum(1 for r in recs if r.replayed)
         return {
             "executions": len(recs),
             "replayed_steps": replayed,
             "effective_steps": len(recs) - replayed,
+            "rescales": 0,
         }

@@ -1,6 +1,8 @@
 """Fleet simulator: event-engine determinism, goodput bounds, scheduler
-invariants through reconfigurations, SDC rollback semantics, checkpoint-
-interval policy, power/carbon ratios, Chrome-trace export, and the
+invariants through reconfigurations, SDC rollback semantics, elastic
+re-scale (shrink-on-starvation, grow-back, grammar stability),
+roofline-fed step times, checkpoint-write contention + sim-vs-Young/Daly
+interval agreement, power/carbon ratios, Chrome-trace export, and the
 sim-vs-ResilientTrainer bridge."""
 
 import json
@@ -11,11 +13,16 @@ from optional_deps import hypothesis, st  # real or deterministic shim
 from repro.core import hwspec
 from repro.core.goodput import GoodputLedger, modeled_goodput
 from repro.core.sdc import SDCRateModel
-from repro.fleet import (EventEngine, FleetConfig, FleetSimulator, JobSpec,
-                         PowerModel, generation_efficiency_table,
+from repro.fleet import (GRAMMAR_KINDS, EventEngine, FleetConfig,
+                         FleetSimulator, JobSpec, PowerModel,
+                         StepTimeModel, TrainWorkload,
+                         generation_efficiency_table,
+                         generation_step_times, grammar_ok,
+                         job_spec_from_roofline,
                          optimal_checkpoint_interval_s,
-                         search_checkpoint_interval, simulate_trainer_plan,
-                         sustainability_ratios)
+                         search_checkpoint_interval,
+                         sim_checkpoint_interval_sweep,
+                         simulate_trainer_plan, sustainability_ratios)
 
 
 def _ledger_dump(led: GoodputLedger):
@@ -306,6 +313,344 @@ def test_bridge_horizon_covers_dense_failure_plans():
     assert led.effective_steps == 18
     rework = sum(s for k, s in led.structure() if k == "rework")
     assert rework == 15 + 16 + 17  # restore always from the bootstrap
+
+
+# ------------------------------------------------------ elastic re-scale
+
+
+def _elastic_scenario(policy):
+    """j0 (3 cubes) loses a cube at step 1000 on a spare-less pod; the
+    2 h repair either re-admits it (queue) or grows it back (shrink)."""
+    cfg = FleetConfig(tpu="tpu_v4", total_cubes=4, host_mtbf_hours=None,
+                      repair_hours=2.0)
+    jobs = [JobSpec(name="j0", chips=3 * 64, total_steps=10**9,
+                    step_time_s=1.0, checkpoint_every_steps=300,
+                    scale_policy=policy,
+                    min_cubes=1 if policy == "shrink" else 0,
+                    failure_steps=((1000, -1),)),
+            JobSpec(name="j1", chips=64, total_steps=10**9,
+                    step_time_s=1.0, checkpoint_every_steps=300)]
+    sim = FleetSimulator(cfg, jobs)
+    sim.run(4 * 3600.0)
+    return sim
+
+
+def test_elastic_shrink_beats_queue_same_trace():
+    """The paper's "reschedule at smaller scale" arm: on the identical
+    deterministic failure trace, shrinking wins on goodput AND steps."""
+    queue, shrink = _elastic_scenario("queue"), _elastic_scenario("shrink")
+    qj, sj = queue.jobs["j0"], shrink.jobs["j0"]
+    assert sj.ledger.goodput > qj.ledger.goodput
+    assert sj.base_step > qj.base_step
+    assert queue.stats["starvations"] == 1 and queue.stats["rescales"] == 0
+    assert shrink.stats["starvations"] == 0 and shrink.stats["rescales"] == 1
+
+
+def test_grow_back_after_repair():
+    """The shrunken job returns to full size when the repair frees the
+    cube: graceful snapshot (exactly one rework event — the shrink's),
+    full-speed stepping afterwards, wall clock still partitioned."""
+    sim = _elastic_scenario("shrink")
+    j0 = sim.jobs["j0"]
+    assert j0.rescales == 1 and j0.grow_backs == 1
+    assert j0.cubes == j0.spec.full_cubes == 3
+    assert j0.step_time_s == pytest.approx(1.0)  # back to full speed
+    reworks = [e for e in j0.ledger.events if e.kind == "rework"]
+    assert len(reworks) == 1  # shrink reworks; grow-back must not
+    # shrink ran 2 of 3 cubes: rework priced at the shrunken step time
+    assert reworks[0].seconds == pytest.approx(reworks[0].steps * 1.5)
+    for jr in sim.jobs.values():  # nothing dropped or double-charged
+        assert jr.ledger.total_seconds == pytest.approx(4 * 3600.0)
+
+
+def test_elastic_rescale_deterministic():
+    """Same seed, stochastic failures, shrink policy -> bitwise-identical
+    ledgers, stats and trace (the event-sequence determinism pin)."""
+
+    def build():
+        cfg = FleetConfig(tpu="tpu_v4", total_cubes=10,
+                          host_mtbf_hours=100.0, repair_hours=6.0, seed=13)
+        jobs = [JobSpec(name=f"j{i}", chips=3 * 64, total_steps=10**9,
+                        step_time_s=1.0, checkpoint_every_steps=200,
+                        scale_policy="shrink", min_cubes=1)
+                for i in range(3)]
+        sim = FleetSimulator(cfg, jobs)
+        sim.run(2 * 86400.0)
+        return sim
+
+    a, b = build(), build()
+    assert a.stats == b.stats
+    for name in a.jobs:
+        assert _ledger_dump(a.jobs[name].ledger) == \
+            _ledger_dump(b.jobs[name].ledger)
+    assert a.trace.chrome_trace() == b.trace.chrome_trace()
+    assert a.stats["rescales"] > 0  # the elastic arm actually fired
+
+
+def test_elastic_ledger_grammar_stable():
+    """Bridge contract: re-scale events never invent ledger vocabulary —
+    every event of an elastic run speaks the pinned five kinds."""
+    sim = _elastic_scenario("shrink")
+    assert set(GRAMMAR_KINDS) == {"steps", "rework", "detect", "restore",
+                                  "idle"}
+    for jr in sim.jobs.values():
+        assert grammar_ok(jr.ledger)
+        assert all(k in GRAMMAR_KINDS for k, _ in jr.ledger.structure())
+
+
+def test_elastic_admission_shrinks_and_respects_min_cubes():
+    """A job arriving into a too-small pod admits at the largest
+    schedulable slice >= min_cubes; below the floor it queues."""
+    cfg = FleetConfig(tpu="tpu_v4", total_cubes=2, host_mtbf_hours=None)
+    ok = JobSpec(name="fits", chips=4 * 64, total_steps=1000,
+                 step_time_s=1.0, scale_policy="shrink", min_cubes=2)
+    sim = FleetSimulator(cfg, [ok])
+    sim.run(10.0)
+    jr = sim.jobs["fits"]
+    assert jr.state == "running" and jr.cubes == 2
+    assert jr.step_time_s == pytest.approx(2.0)  # 4 cubes' work on 2
+    assert jr.rescales == 1
+
+    floor = JobSpec(name="floor", chips=4 * 64, total_steps=1000,
+                    step_time_s=1.0, scale_policy="shrink", min_cubes=3)
+    sim = FleetSimulator(cfg, [floor])
+    sim.run(10.0)
+    assert sim.jobs["floor"].state == "queued"
+
+
+def test_scale_policy_validation():
+    with pytest.raises(ValueError):
+        JobSpec(name="j", chips=64, total_steps=10, scale_policy="grow")
+    with pytest.raises(ValueError):
+        JobSpec(name="j", chips=64, total_steps=10, min_cubes=5)  # > full
+    j = JobSpec(name="j", chips=2 * 64, total_steps=10,
+                scale_policy="shrink")
+    assert j.min_cubes == 1  # shrink defaults the floor to one cube
+
+
+def test_ocs_grow_and_max_slice_hooks():
+    from repro.core.ocs import OCSPodScheduler
+    sched = OCSPodScheduler(total_cubes=6)
+    sched.allocate("j", 2 * 64)
+    assert sched.max_slice_cubes(10) == 4  # capped by idle cubes
+    grown = sched.grow("j", 2)
+    assert grown is not None and len(grown.cubes) == 4
+    assert sched.spare_cubes() == 2
+    sched.check_invariants()
+    assert sched.grow("j", 3) is None  # only 2 idle left
+    with pytest.raises(KeyError):
+        sched.grow("nope", 1)
+    # pre-OCS pods cannot stitch new cubes into a block
+    contig = OCSPodScheduler(total_cubes=8, contiguous=True)
+    contig.allocate("j", 2 * 64)
+    assert contig.grow("j", 1) is None
+    assert contig.max_slice_cubes(8) <= 6
+
+
+# ------------------------------------------------- roofline-fed step times
+
+
+def test_step_time_model_tracks_table1_anchors():
+    """Per-generation validation: the same workload gets monotonically
+    faster v2 -> Ironwood, and the total speedup lands between the
+    Table-1 HBM-bandwidth and peak-bf16 ratios (the step is a mix of
+    memory, compute and collective terms, so it can't beat peak)."""
+    wl = TrainWorkload(n_params=70e9, tokens_per_step=4096 * 4096)
+    times = generation_step_times(wl, cubes=8)
+    names = [s.name for s in hwspec.GENERATIONS]
+    vals = [times[n] for n in names]
+    assert vals == sorted(vals, reverse=True)
+    ss = hwspec.scaling_summary()
+    speedup = times["tpu_v2"] / times["ironwood"]
+    assert ss["hbm_bandwidth_x"] <= speedup <= ss["node_peak_bf16_x"] * 1.02
+
+
+def test_step_time_model_scaling_curve():
+    """The elastic arm's curve: more cubes never slower (up to the ring
+    factor), ideal-linear while compute-bound, flattening into the
+    collective floor — so shrinking a big slice costs less than linear."""
+    wl = TrainWorkload(n_params=70e9, tokens_per_step=4096 * 4096)
+    m = StepTimeModel("tpu_v4", wl)
+    sizes = (4, 8, 16, 32, 64, 128, 256)
+    curve = [m(c) for c in sizes]
+    assert all(a >= b * (1 - 1e-3) for a, b in zip(curve, curve[1:]))
+    assert curve[0] / curve[1] == pytest.approx(2.0, rel=0.01)  # linear
+    assert curve[-2] / curve[-1] < 1.5  # collective floor
+    assert m.report(256).bound == "collective"
+    assert m.report(4).bound == "compute"
+
+
+def test_job_spec_from_roofline_drives_elastic_sim():
+    """A roofline-priced JobSpec: full-size step time equals the model's,
+    shrinking follows the curve inside the simulator."""
+    wl = TrainWorkload(n_params=8e9, tokens_per_step=1024 * 1024)
+    spec = job_spec_from_roofline(
+        "r", "tpu_v4", wl, chips=3 * 64, total_steps=10**9,
+        checkpoint_every_steps=500, scale_policy="shrink", min_cubes=1)
+    m = StepTimeModel("tpu_v4", wl)
+    assert spec.step_time_s == pytest.approx(m(3))
+    assert spec.step_time_for(2) == pytest.approx(m(2))
+    cfg = FleetConfig(tpu="tpu_v4", total_cubes=4, host_mtbf_hours=None,
+                      repair_hours=50.0)  # no repair inside the horizon
+    spec = JobSpec(**{**spec.__dict__, "failure_steps": ((100, -1),)})
+    sim = FleetSimulator(cfg, [spec, JobSpec(
+        name="filler", chips=64, total_steps=10**9, step_time_s=1.0)])
+    sim.run(m(3) * 100 + 40_000.0)
+    jr = sim.jobs["r"]
+    assert jr.cubes == 2 and jr.rescales == 1
+    assert jr.step_time_s == pytest.approx(m(2))
+
+
+# ------------------------------------- checkpoint writes: stalls, contention
+
+
+def test_sync_ckpt_write_stalls_and_interval_tradeoff():
+    """Synchronous writes charge idle stalls per snapshot; halving the
+    interval doubles the write overhead (the Young/Daly tension the
+    sweep optimizes)."""
+
+    def goodput(every):
+        cfg = FleetConfig(tpu="tpu_v4", total_cubes=2,
+                          host_mtbf_hours=None, ckpt_write_s=30.0)
+        job = JobSpec(name="j", chips=64, total_steps=10**9,
+                      step_time_s=1.0, checkpoint_every_steps=every)
+        sim = FleetSimulator(cfg, [job])
+        sim.run(40_000.0)
+        jr = sim.jobs["j"]
+        stalls = [e for e in jr.ledger.events
+                  if e.kind == "idle" and e.note.startswith("ckpt write")]
+        assert stalls and all(e.seconds == pytest.approx(30.0)
+                              for e in stalls)
+        # stalls are booked at write start (same convention as
+        # detect/restore), so a write straddling the horizon may overhang
+        # it by at most one stall
+        assert 40_000.0 <= jr.ledger.total_seconds <= 40_000.0 + 30.0
+        return jr.ledger.goodput
+
+    # failure-free: longer intervals strictly win (only write cost)
+    assert goodput(200) < goodput(400) < goodput(800)
+
+
+def test_ckpt_write_contention_multiplies_stall():
+    """Two jobs on the same cadence: the second write to start pays the
+    shared-bandwidth factor (2x) at the first collision."""
+    cfg = FleetConfig(tpu="tpu_v4", total_cubes=4, host_mtbf_hours=None,
+                      ckpt_write_s=20.0)
+    jobs = [JobSpec(name=f"j{i}", chips=64, total_steps=10**9,
+                    step_time_s=1.0, checkpoint_every_steps=100)
+            for i in range(2)]
+    sim = FleetSimulator(cfg, jobs)
+    sim.run(150.0)
+    stalls = {n: [e.seconds for e in j.ledger.events
+                  if e.kind == "idle" and e.note.startswith("ckpt write")]
+              for n, j in sim.jobs.items()}
+    assert stalls["j0"] == [pytest.approx(20.0)]
+    assert stalls["j1"] == [pytest.approx(40.0)]  # started mid-j0-write
+
+
+def test_failure_mid_write_rolls_back_to_previous_snapshot():
+    """Durability: a snapshot only counts once its write completes. j1's
+    planned failure kills j0's cube at t=120, mid j0's write of the
+    step-100 snapshot -> j0 reworks all 100 steps from the bootstrap."""
+    cfg = FleetConfig(tpu="tpu_v4", total_cubes=3, host_mtbf_hours=None,
+                      detect_s=1.0, restore_s=1.0, reconfig_s=0.0,
+                      ckpt_write_s=50.0)
+    jobs = [JobSpec(name="j0", chips=64, total_steps=10**9,
+                    step_time_s=1.0, checkpoint_every_steps=100),
+            JobSpec(name="j1", chips=64, total_steps=10**9,
+                    step_time_s=1.0, checkpoint_every_steps=10**8,
+                    failure_steps=((120, 0),))]  # cube 0 is j0's
+    sim = FleetSimulator(cfg, jobs)
+    sim.run(500.0)
+    j0 = sim.jobs["j0"]
+    reworks = [e for e in j0.ledger.events if e.kind == "rework"]
+    assert reworks and reworks[0].steps == 100  # not 0: write was lost
+    # control: the same failure *after* the write completes reworks only
+    # the steps past the (now durable) snapshot
+    jobs[1] = JobSpec(name="j1", chips=64, total_steps=10**9,
+                      step_time_s=1.0, checkpoint_every_steps=10**8,
+                      failure_steps=((170, 0),))
+    sim = FleetSimulator(cfg, jobs)
+    sim.run(500.0)
+    j0 = sim.jobs["j0"]
+    reworks = [e for e in j0.ledger.events if e.kind == "rework"]
+    assert reworks and 0 < reworks[0].steps <= 30
+
+
+def test_aborted_write_stops_contending():
+    """Regression: a write voided by a failure must release the shared
+    filer — a later writer pays the uncontended stall, not 2x."""
+    cfg = FleetConfig(tpu="tpu_v4", total_cubes=4, host_mtbf_hours=None,
+                      detect_s=1.0, restore_s=1.0, reconfig_s=0.0,
+                      ckpt_write_s=50.0)
+    jobs = [JobSpec(name="j0", chips=64, total_steps=10**9,
+                    step_time_s=1.0, checkpoint_every_steps=100),
+            JobSpec(name="j1", chips=64, total_steps=10**9,
+                    step_time_s=1.0, checkpoint_every_steps=10**8,
+                    failure_steps=((120, 0),)),  # kills j0 mid-write
+            JobSpec(name="j2", chips=64, total_steps=10**9,
+                    step_time_s=1.0, checkpoint_every_steps=130)]
+    sim = FleetSimulator(cfg, jobs)
+    sim.run(140.0)
+    # j0's write (100..150) was aborted at t=120; j2's write at t=130
+    # must see an idle filer
+    stalls = [e.seconds for e in sim.jobs["j2"].ledger.events
+              if e.kind == "idle" and e.note.startswith("ckpt write")]
+    assert stalls == [pytest.approx(50.0)]
+
+
+def test_pre_grow_snapshot_contends_and_is_durable_on_completion():
+    """The grow-back snapshot is a synchronous write like any other:
+    with ckpt_write_s set it stalls the job and only becomes durable at
+    completion (ckpt_write_end is armed, last_ckpt_step is not yet)."""
+    cfg = FleetConfig(tpu="tpu_v4", total_cubes=3, host_mtbf_hours=None,
+                      repair_hours=1.0, detect_s=1.0, restore_s=1.0,
+                      reconfig_s=0.0, ckpt_write_s=40.0)
+    job = JobSpec(name="j", chips=3 * 64, total_steps=10**9,
+                  step_time_s=1.0, checkpoint_every_steps=10**8,
+                  scale_policy="shrink", min_cubes=1,
+                  failure_steps=((500, -1),))
+    sim = FleetSimulator(cfg, [job])
+    sim.run(6000.0)  # repair (and grow-back) lands at t=4100
+    jr = sim.jobs["j"]
+    assert jr.rescales == 1 and jr.grow_backs == 1
+    pre_grow = [e for e in jr.ledger.events
+                if e.kind == "idle" and "(pre-grow)" in e.note]
+    assert len(pre_grow) == 1
+    assert pre_grow[0].seconds >= 40.0  # write stall (+ partial step)
+    # the snapshot settled after completion: rollback point advanced
+    assert jr.last_ckpt_step > 0 or jr.ckpt_write_end is not None
+
+
+def test_sim_interval_optimum_matches_model_search():
+    """The acceptance pin for layer 3: the simulator's optimal
+    checkpoint interval lands within one grid bucket of the
+    closed-form ``search_checkpoint_interval`` family optimum."""
+    out = sim_checkpoint_interval_sweep(points=7, mean_failures=20)
+    assert out["agree_within_one_bucket"], out
+    # and the curve is a real hump: the optimum beats both ends
+    best = out["sim_goodput"][out["sim_best_index"]]
+    assert best > out["sim_goodput"][0]
+    assert best > out["sim_goodput"][-1]
+
+
+# --------------------------------------------------- incremental deployment
+
+
+def test_incremental_install_admits_jobs_as_cubes_land():
+    cfg = FleetConfig(tpu="tpu_v4", total_cubes=8, host_mtbf_hours=None,
+                      install_schedule=((0.0, 4), (1000.0, 8)))
+    jobs = [JobSpec(name=f"j{i}", chips=4 * 64, total_steps=10**9,
+                    step_time_s=1.0, checkpoint_every_steps=500)
+            for i in range(2)]
+    sim = FleetSimulator(cfg, jobs)
+    sim.run(2000.0)
+    assert sim.jobs["j0"].first_admitted_at == pytest.approx(0.0)
+    assert sim.jobs["j1"].first_admitted_at == pytest.approx(1000.0)
+    with pytest.raises(ValueError):
+        FleetConfig(install_schedule=((0.0, 4), (10.0, 2)))  # shrinking
+    with pytest.raises(ValueError):
+        FleetConfig(total_cubes=4, install_schedule=((0.0, 8),))
 
 
 # ------------------------------------------------------- checkpoint policy

@@ -2,7 +2,7 @@
 per-token loop, prefix caching + self-speculative decoding, and the
 int8-vs-bf16 paged-decode capacity lever.
 
-Four sections:
+Five sections:
 
   1. static batch — chunked loop vs per-token loop (PR 1's win: one
      compiled program per chunk, one host sync per chunk);
@@ -15,11 +15,17 @@ Four sections:
      the per-token speedup (gate: >= 1.3x at batch 4);
   4. int8 vs bf16 paged decode — tokens/s for both pool dtypes,
      estimated HBM bytes/token streamed by paged attention, and the
-     resident-batch capacity ratio (gate: int8 fits >= 1.5x the tokens).
+     resident-batch capacity ratio (gate: int8 fits >= 1.5x the tokens);
+  5. sharded serving — the same trace on a (data, model) mesh (forced
+     fake host devices in a subprocess): tok/s vs single-host, plus
+     disaggregated prefill/decode page-transfer traffic. On CPU the
+     fake-device mesh pays real overhead, so tok/s is a wiring check,
+     not a speedup claim (see docs/serving.md).
 
   PYTHONPATH=src python benchmarks/bench_serve.py [--arch qwen2_0_5b]
       [--json]        # also write BENCH_serve.json
-      [--smoke]       # fast interpret-mode kernel-routing check (tier-1)
+      [--smoke]       # fast interpret-mode kernel-routing check + the
+                      # fatal sharded-parity gate (tier-1)
 
 ``benchmarks/run.py --only serve --json`` runs the same sections at
 smoke scale through the CSV/JSON harness. See docs/benchmarks.md.
@@ -29,6 +35,8 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
 import sys
 import time
 
@@ -147,6 +155,151 @@ def bench_int8_vs_bf16(cfg, params, *, batch, prompt_len, max_new, chunk,
     return out
 
 
+# -- sharded serving (section 5 + the tier-1 parity gate) -------------------
+#
+# The mesh needs multiple XLA devices, and jax locks the device count at
+# first init — so everything sharded runs in a SUBPROCESS with
+# --xla_force_host_platform_device_count in XLA_FLAGS. The parent invokes
+# this same file with an inner flag; the child prints one JSON line.
+
+
+def _run_sharded_child(flag: str, devices: int = 8,
+                       timeout: int = 900) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={devices} "
+        + env.get("XLA_FLAGS", ""))
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.run([sys.executable, os.path.abspath(__file__), flag],
+                          capture_output=True, text=True, env=env,
+                          timeout=timeout)
+
+
+def sharded_smoke_inner() -> int:
+    """Child process (forced multi-device): sharded-vs-single-host parity.
+
+    Single-host jnp-oracle engine vs a (2, 2)-mesh engine routing the
+    Pallas kernels (interpret mode) through shard_map — bf16-class and
+    int8 pools, speculation on, run twice so the second pass decodes off
+    prefix-cache hits. Then disaggregated vs co-located on the oracle
+    path with nonzero modeled transfer traffic. Exact token match."""
+    cfg = get_smoke("qwen2_0_5b")
+    params = init_params(jax.random.key(0), api.model_specs(cfg))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, n) for n in (9, 13)]
+    reqs = lambda: [Request(rid=i, prompt=p, max_new=4)
+                    for i, p in enumerate(prompts)]
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    failures = 0
+    for cdt, tag in ((None, "fp32"), (jnp.int8, "int8")):
+        octx = ModelContext(compute_dtype=jnp.float32, q_chunk=64,
+                            decode_cache_dtype=cdt)
+        kctx = ModelContext(compute_dtype=jnp.float32, q_chunk=64,
+                            decode_cache_dtype=cdt,
+                            attn_impl="pallas_interpret")
+        solo = ServeEngine(cfg, octx, window=32, max_batch=2, chunk=2,
+                           page_size=8, draft_k=2)
+        shard = ServeEngine(cfg, kctx, window=32, max_batch=2, chunk=2,
+                            page_size=8, draft_k=2, mesh=mesh)
+        for r in range(2):  # run 2 decodes off prefix-cache hits
+            so, sh = solo.run(params, reqs()), shard.run(params, reqs())
+            for i in range(len(prompts)):
+                if not np.array_equal(so[i], sh[i]):
+                    print(f"FAILED [{tag} run {r}]: sharded {sh[i]} != "
+                          f"single-host {so[i]} (rid {i})")
+                    failures += 1
+        if shard.prefix_hit_rate <= 0:
+            print(f"FAILED [{tag}]: sharded run 2 took no prefix hits")
+            failures += 1
+    co = ServeEngine(cfg, ModelContext(compute_dtype=jnp.float32,
+                                       q_chunk=64),
+                     window=32, max_batch=2, chunk=2, page_size=8)
+    dis = ServeEngine(cfg, ModelContext(compute_dtype=jnp.float32,
+                                        q_chunk=64),
+                      window=32, max_batch=2, chunk=2, page_size=8,
+                      disaggregate=True)
+    coo, dio = co.run(params, reqs()), dis.run(params, reqs())
+    for i in range(len(prompts)):
+        if not np.array_equal(coo[i], dio[i]):
+            print(f"FAILED [disagg]: {dio[i]} != co-located {coo[i]}")
+            failures += 1
+    if dis.transfer_stats()["transfer_bytes"] <= 0:
+        print("FAILED [disagg]: no modeled transfer traffic")
+        failures += 1
+    print("SHARDED-PARITY", "FAILED" if failures else "OK",
+          json.dumps(dis.transfer_stats()))
+    return 1 if failures else 0
+
+
+def sharded_bench_inner() -> int:
+    """Child process (forced multi-device): section-5 measurements.
+    Prints one JSON object: single-host vs (2, 2)-mesh trace tok/s and
+    the disaggregated run's transfer traffic / stalls."""
+    cfg = get_smoke("qwen2_0_5b")
+    ctx = ModelContext(compute_dtype=jnp.float32, q_chunk=512)
+    params = init_params(jax.random.key(0), api.model_specs(cfg))
+    window, chunk, trace = 28, 4, 8
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    out = {}
+
+    def tps(eng):
+        reqs = make_trace(trace, cfg.vocab_size, 0, prompt_hi=16, new_hi=12)
+        eng.run(params, make_trace(2, cfg.vocab_size, 1, prompt_hi=16,
+                                   new_hi=4))  # warm
+        t0 = time.time()
+        o = eng.run(params, reqs, key=jax.random.key(0))
+        return sum(len(v) for v in o.values()) / (time.time() - t0)
+
+    solo = ServeEngine(cfg, ctx, window=window, max_batch=4, chunk=chunk,
+                       page_size=8)
+    out["single_tok_s"] = tps(solo)
+    shard = ServeEngine(cfg, ctx, window=window, max_batch=4, chunk=chunk,
+                        page_size=8, mesh=mesh)
+    out["sharded_tok_s"] = tps(shard)
+    out["mesh"] = shard.sharding_report["mesh"]
+    out["dropped_rules"] = shard.sharding_report["dropped_rules"]
+    dis = ServeEngine(cfg, ctx, window=window, max_batch=4, chunk=chunk,
+                      page_size=8, mesh=mesh, disaggregate=True,
+                      prefill_workers=2)
+    out["disagg_tok_s"] = tps(dis)
+    ts = dis.transfer_stats()
+    out["transfer_bytes"] = ts["transfer_bytes"]
+    out["transfer_pages"] = ts["transfer_pages"]
+    out["transfer_stall_boundaries"] = ts["transfer_stall_boundaries"]
+    print(json.dumps(out))
+    return 0
+
+
+def bench_sharded(emit, log) -> None:
+    """Section 5 driver: parse the child's JSON and emit metrics."""
+    proc = _run_sharded_child("--sharded-bench-inner")
+    if proc.returncode != 0:
+        emit("serve/sharded_tok_s", 0.0,
+             f"FAILED: child rc={proc.returncode}: {proc.stderr[-400:]}")
+        return
+    r = json.loads(proc.stdout.strip().splitlines()[-1])
+    ratio = r["sharded_tok_s"] / r["single_tok_s"]
+    emit("serve/single_host_tok_s", r["single_tok_s"], "")
+    emit("serve/sharded_tok_s", r["sharded_tok_s"],
+         f"mesh={r['mesh']} (fake CPU devices: wiring check)")
+    emit("serve/sharded_vs_single", ratio, "")
+    emit("serve/disagg_tok_s", r["disagg_tok_s"], "")
+    emit("serve/disagg_transfer_bytes", r["transfer_bytes"],
+         f"pages={r['transfer_pages']}" if r["transfer_bytes"] > 0
+         else "FAILED: no transfer traffic")
+    emit("serve/disagg_stall_boundaries", r["transfer_stall_boundaries"],
+         "")
+    log(f"sharded serving (mesh={r['mesh']}, fake CPU devices):")
+    log(f"single host    : {r['single_tok_s']:8.1f} tok/s")
+    log(f"sharded        : {r['sharded_tok_s']:8.1f} tok/s   "
+        f"({ratio:.2f}x — CPU mesh overhead expected)")
+    log(f"disaggregated  : {r['disagg_tok_s']:8.1f} tok/s   "
+        f"{r['transfer_bytes']} transfer bytes, "
+        f"{r['transfer_stall_boundaries']} stall boundaries")
+    for line in r["dropped_rules"]:
+        log(f"  fallback: {line}")
+
+
 def run_sections(emit, *, arch="qwen2_0_5b", batch=4, prompt_len=16,
                  max_new=32, chunk=8, trace=12, prefix_len=448, tail_len=4,
                  prefix_max_new=12, draft_k=2, seed=0,
@@ -241,6 +394,9 @@ def run_sections(emit, *, arch="qwen2_0_5b", batch=4, prompt_len=16,
         f"{q['int8']['est_hbm_bytes_per_token']} B/token")
     log(f"capacity ratio : {cap:.2f}x resident tokens per HBM byte")
 
+    # 5. sharded serving (subprocess: needs a multi-device mesh) ----------
+    bench_sharded(emit, log)
+
 
 def run(emit):
     """benchmarks/run.py suite entry (smoke scale, CSV/JSON harness).
@@ -297,11 +453,24 @@ def run_smoke() -> int:
         print(f"smoke [{tag}]: kernel==oracle over "
               f"{sum(len(p) for p in prompts)} prompt + 8 decode tokens, "
               f"{compiles} span-prefill programs (stable)")
+    # sharded-parity gate (fatal): mesh decode == single-host decode,
+    # disaggregated == co-located — in a forced-multi-device subprocess
+    proc = _run_sharded_child("--sharded-smoke-inner")
+    tail = proc.stdout.strip().splitlines()
+    print(tail[-1] if tail else "(sharded child produced no output)")
+    if proc.returncode != 0:
+        print(f"FAILED [sharded]: child rc={proc.returncode}\n"
+              f"{proc.stdout[-2000:]}\n{proc.stderr[-2000:]}")
+        failures += 1
     print("bench_serve --smoke:", "FAILED" if failures else "PASSED")
     return 1 if failures else 0
 
 
 def main() -> None:
+    if "--sharded-smoke-inner" in sys.argv:
+        sys.exit(sharded_smoke_inner())
+    if "--sharded-bench-inner" in sys.argv:
+        sys.exit(sharded_bench_inner())
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2_0_5b")
     ap.add_argument("--batch", type=int, default=4)

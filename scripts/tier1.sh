@@ -9,7 +9,9 @@ cd "$(dirname "$0")/.."
 python scripts/docs_check.py
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 # kernel-routing gate: every paged serving path through the Pallas
-# kernels (interpret mode, fp + int8) must match the jnp oracle engine
+# kernels (interpret mode, fp + int8) must match the jnp oracle engine;
+# also runs the sharded-parity subprocess (8 forced devices): (2,2)-mesh
+# and disaggregated engines must be token-identical to single-host
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python benchmarks/bench_serve.py --smoke
 # fleet gate: deterministic elastic scenario — the re-scale arm must

@@ -12,6 +12,8 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention as _decode_pl
@@ -65,20 +67,23 @@ def decode_attention(q: Array, k_cache: Array, v_cache: Array, pos: Array,
                       block_k=block_k, interpret=impl == "interpret")
 
 
-@partial(jax.jit, static_argnames=("impl", "window"))
-def paged_decode_attention(q: Array, k_pages: Array, v_pages: Array,
-                           page_table: Array, pos: Array, *,
-                           k_scale: Optional[Array] = None,
-                           v_scale: Optional[Array] = None,
-                           impl: str = "pallas",
-                           window: Optional[int] = None) -> Array:
-    """q: (B,H,D); pages (N,P,KV,D); page_table (B,M); pos (B,).
+# -- paged attention: single-host impls + shard_map mesh wiring -------------
+#
+# On a serving (data, model) mesh the paged kernels stay PER-SHARD: shard_map
+# splits queries on the head axis over "model" (and batch over "data"), each
+# shard streaming its local KV-head slice of the page pool through the
+# unchanged kernel body. KV placement follows the GQA divisibility story:
+#   * kv % model_size == 0  — pool sharded on the KV-head axis (true TP);
+#   * otherwise             — pool replicated (the AxisRules fallback) and
+#     each shard dynamic-slices the KV groups its local Q heads map to,
+#     provided the per-shard head block stays group-aligned;
+#   * irregular splits      — heads replicated too (no model partition).
+# The host page table and positions are broadcast (or batch-sharded), so
+# every shard addresses pages identically and CoW/prefix logic is untouched.
 
-    int8 pages stream natively when the (N,P,KV) ``k_scale``/``v_scale``
-    pools are passed: the kernel dequantizes in VMEM, page by page.
-    "ref" gathers (and dequantizes) the pages and reuses the dense ring
-    oracle (no wraps: every absolute position is < M*P by
-    construction)."""
+
+def _paged_decode_local(q, k_pages, v_pages, page_table, pos, k_scale,
+                        v_scale, impl, window):
     if impl == "ref":
         kg = ref.paged_gather_dequant_ref(k_pages, page_table, k_scale,
                                           q.dtype)
@@ -90,18 +95,8 @@ def paged_decode_attention(q: Array, k_pages: Array, v_pages: Array,
                             window=window, interpret=impl == "interpret")
 
 
-@partial(jax.jit, static_argnames=("impl", "window"))
-def paged_decode_span_attention(q: Array, k_pages: Array, v_pages: Array,
-                                page_table: Array, pos: Array, *,
-                                k_scale: Optional[Array] = None,
-                                v_scale: Optional[Array] = None,
-                                impl: str = "pallas",
-                                window: Optional[int] = None) -> Array:
-    """k-token-query paged decode. q: (B,T,H,D) — T consecutive tokens
-    per sequence at absolute positions ``pos .. pos+T-1`` (speculative
-    verify / suffix prefill / chunked cold prefill); pages (N,P,KV,D);
-    page_table (B,M); pos (B,) valid count BEFORE the span. int8 pages
-    stream natively via ``k_scale``/``v_scale``. Returns (B,T,H,D)."""
+def _paged_span_local(q, k_pages, v_pages, page_table, pos, k_scale,
+                      v_scale, impl, window):
     if impl == "ref":
         kg = ref.paged_gather_dequant_ref(k_pages, page_table, k_scale,
                                           q.dtype)
@@ -111,6 +106,131 @@ def paged_decode_span_attention(q: Array, k_pages: Array, v_pages: Array,
     return _paged_span_pl(q, k_pages, v_pages, page_table, pos,
                           k_scale=k_scale, v_scale=v_scale,
                           window=window, interpret=impl == "interpret")
+
+
+def _mesh_axis_size(mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def _paged_partition(mesh, data_axis, model_axis, b, h, kv):
+    """Static plan for splitting paged attention over a (data, model) mesh.
+
+    Returns (data_spec_axis, head_spec_axis, kv_spec_axis, slice_kv,
+    model_size). ``slice_kv`` marks the replicated-KV GQA fallback where
+    each shard dynamic-slices its local KV groups out of the full pool."""
+    d = _mesh_axis_size(mesh, data_axis)
+    m = _mesh_axis_size(mesh, model_axis)
+    db = data_axis if (d > 1 and b % d == 0) else None
+    hm = model_axis if (m > 1 and h % m == 0) else None
+    kvm = None
+    slice_kv = False
+    if hm is not None:
+        if kv % m == 0:
+            kvm = model_axis  # KV pool shards with the Q heads (true TP)
+        else:
+            h_local, g = h // m, h // kv
+            if h_local % g == 0 or g % h_local == 0:
+                slice_kv = True  # replicated pool, group-aligned local view
+            else:
+                hm = None  # irregular group split: replicate heads too
+    return db, hm, kvm, slice_kv, m
+
+
+def _local_kv_slice(arrs, model_axis, h, kv, m):
+    """Inside shard_map with replicated pools: slice the KV-head groups
+    that shard ``axis_index(model_axis)``'s local Q heads map to. Local
+    head j then sees local KV head j // (h_local // kv_local), matching
+    the global GQA grouping because the head block is group-aligned."""
+    idx = jax.lax.axis_index(model_axis)
+    h_local, g = h // m, h // kv
+    kv_local = max(1, h_local // g)
+    start = (idx * h_local) // g
+    return [None if a is None else
+            jax.lax.dynamic_slice_in_dim(a, start, kv_local, axis=2)
+            for a in arrs]
+
+
+def _paged_sharded(local_fn, mesh, data_axis, model_axis, head_axis, q,
+                   k_pages, v_pages, page_table, pos, k_scale, v_scale):
+    b, h, kv = q.shape[0], q.shape[head_axis], k_pages.shape[2]
+    db, hm, kvm, slice_kv, m = _paged_partition(
+        mesh, data_axis, model_axis, b, h, kv)
+    if db is None and hm is None:
+        return local_fn(q, k_pages, v_pages, page_table, pos, k_scale,
+                        v_scale)
+    qaxes = [db] + [None] * (q.ndim - 1)
+    qaxes[head_axis] = hm
+    qspec = P(*qaxes)
+    pspec, sspec = P(None, None, kvm, None), P(None, None, kvm)
+    operands = [q, k_pages, v_pages, page_table, pos]
+    specs = [qspec, pspec, pspec, P(db, None), P(db)]
+    has_scale = k_scale is not None
+    if has_scale:
+        operands += [k_scale, v_scale]
+        specs += [sspec, sspec]
+
+    def body(*xs):
+        ql, kp, vp, tab, posl = xs[:5]
+        ks, vs = (xs[5], xs[6]) if has_scale else (None, None)
+        if slice_kv:
+            kp, vp, ks, vs = _local_kv_slice([kp, vp, ks, vs],
+                                             model_axis, h, kv, m)
+        return local_fn(ql, kp, vp, tab, posl, ks, vs)
+
+    return shard_map(body, mesh=mesh, in_specs=tuple(specs),
+                     out_specs=qspec, check_rep=False)(*operands)
+
+
+@partial(jax.jit, static_argnames=("impl", "window", "mesh", "data_axis",
+                                   "model_axis"))
+def paged_decode_attention(q: Array, k_pages: Array, v_pages: Array,
+                           page_table: Array, pos: Array, *,
+                           k_scale: Optional[Array] = None,
+                           v_scale: Optional[Array] = None,
+                           impl: str = "pallas",
+                           window: Optional[int] = None,
+                           mesh=None, data_axis: str = "data",
+                           model_axis: str = "model") -> Array:
+    """q: (B,H,D); pages (N,P,KV,D); page_table (B,M); pos (B,).
+
+    int8 pages stream natively when the (N,P,KV) ``k_scale``/``v_scale``
+    pools are passed: the kernel dequantizes in VMEM, page by page.
+    "ref" gathers (and dequantizes) the pages and reuses the dense ring
+    oracle (no wraps: every absolute position is < M*P by construction).
+    ``mesh``: when set, shard_map the call over (data_axis, model_axis) —
+    heads split over "model", batch over "data", KV pool sharded or
+    replicate-and-sliced per the GQA plan above."""
+    local = partial(_paged_decode_local, impl=impl, window=window)
+    if mesh is not None:
+        return _paged_sharded(local, mesh, data_axis, model_axis, 1, q,
+                              k_pages, v_pages, page_table, pos, k_scale,
+                              v_scale)
+    return local(q, k_pages, v_pages, page_table, pos, k_scale, v_scale)
+
+
+@partial(jax.jit, static_argnames=("impl", "window", "mesh", "data_axis",
+                                   "model_axis"))
+def paged_decode_span_attention(q: Array, k_pages: Array, v_pages: Array,
+                                page_table: Array, pos: Array, *,
+                                k_scale: Optional[Array] = None,
+                                v_scale: Optional[Array] = None,
+                                impl: str = "pallas",
+                                window: Optional[int] = None,
+                                mesh=None, data_axis: str = "data",
+                                model_axis: str = "model") -> Array:
+    """k-token-query paged decode. q: (B,T,H,D) — T consecutive tokens
+    per sequence at absolute positions ``pos .. pos+T-1`` (speculative
+    verify / suffix prefill / chunked cold prefill); pages (N,P,KV,D);
+    page_table (B,M); pos (B,) valid count BEFORE the span. int8 pages
+    stream natively via ``k_scale``/``v_scale``. ``mesh`` shard_maps the
+    call exactly like paged_decode_attention (head axis 2 here).
+    Returns (B,T,H,D)."""
+    local = partial(_paged_span_local, impl=impl, window=window)
+    if mesh is not None:
+        return _paged_sharded(local, mesh, data_axis, model_axis, 2, q,
+                              k_pages, v_pages, page_table, pos, k_scale,
+                              v_scale)
+    return local(q, k_pages, v_pages, page_table, pos, k_scale, v_scale)
 
 
 @partial(jax.jit, static_argnames=("impl", "chunk"))

@@ -8,16 +8,47 @@ Two modes:
     the continuous-batching scheduler, reporting tokens/s, occupancy and
     preemptions.
 
+``--mesh D,M`` serves on a (data, model) mesh — on a CPU host the device
+count is forced to D*M fake devices BEFORE jax initializes (same trick as
+dryrun/mesh), so the sharded datapath is exercisable anywhere. Add
+``--disaggregate`` for prefill/decode disaggregation with ``N``
+``--prefill-workers`` handing pages over a modeled ``--link`` (ici|dcn).
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2_0_5b --smoke \
       --batch 4 --prompt-len 32 --max-new 16
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2_0_5b --smoke \
-      --trace 16 --max-batch 4 --chunk 8
+      --trace 16 --max-batch 4 --chunk 8 --mesh 4,2 --disaggregate
 """
 
 from __future__ import annotations
 
 import argparse
+import os
+import re
+import sys
 import time
+
+
+def _parse_mesh_argv() -> tuple:
+    """Pre-parse ``--mesh D,M`` from argv (before the jax import below:
+    XLA locks the device count at first init, so the host-platform fake
+    device count must be in XLA_FLAGS already)."""
+    for i, a in enumerate(sys.argv):
+        m = (re.fullmatch(r"--mesh=(\d+),(\d+)", a)
+             or (re.fullmatch(r"(\d+),(\d+)", sys.argv[i + 1])
+                 if a == "--mesh" and i + 1 < len(sys.argv) else None))
+        if m:
+            return int(m.group(1)), int(m.group(2))
+    return None
+
+
+_MESH_SHAPE = _parse_mesh_argv()
+if _MESH_SHAPE is not None and "--xla_force_host_platform_device_count" \
+        not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count="
+        f"{_MESH_SHAPE[0] * _MESH_SHAPE[1]} "
+        + os.environ.get("XLA_FLAGS", ""))
 
 import jax
 import jax.numpy as jnp
@@ -74,7 +105,25 @@ def main() -> None:
                     help="int8 paged KV pages (attention archs)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", default=None, metavar="D,M",
+                    help="serve on a (data, model) mesh of D*M devices "
+                         "(forced as fake host devices on CPU)")
+    ap.add_argument("--rules", default="baseline_dp_tp",
+                    help="AxisRules set for the serving mesh")
+    ap.add_argument("--disaggregate", action="store_true",
+                    help="prefill/decode disaggregation (paged archs)")
+    ap.add_argument("--prefill-workers", type=int, default=1)
+    ap.add_argument("--link", choices=["ici", "dcn"], default="ici",
+                    help="modeled prefill->decode page-transfer link")
     args = ap.parse_args()
+
+    mesh = None
+    if args.mesh:
+        d, m = (int(x) for x in args.mesh.split(","))
+        if jax.device_count() < d * m:
+            raise SystemExit(f"--mesh {d},{m} needs {d * m} devices, "
+                             f"have {jax.device_count()}")
+        mesh = jax.make_mesh((d, m), ("data", "model"))
 
     cfg = get_smoke(args.arch) if args.smoke else get_arch(args.arch)
     ctx = ModelContext(
@@ -94,8 +143,20 @@ def main() -> None:
                          temperature=args.temperature,
                          draft_k=args.draft_k if paged else 0,
                          prefix_cache=(paged and not args.no_prefix_cache),
-                         prefill_chunk=args.prefill_chunk)
+                         prefill_chunk=args.prefill_chunk,
+                         mesh=mesh, rules=args.rules,
+                         disaggregate=args.disaggregate,
+                         prefill_workers=args.prefill_workers,
+                         transfer_link=args.link)
     mode = "paged" if engine.paged else "dense"
+    if mesh is not None:
+        mode += "/sharded"
+        rep = engine.sharding_report
+        print(f"mesh={rep['mesh']} rules={rep['rules']}")
+        for line in rep["dropped_rules"]:
+            print(f"  fallback: {line}")
+    if args.disaggregate:
+        mode += "/disagg"
     rng = np.random.default_rng(args.seed)
 
     if args.trace:
@@ -119,6 +180,23 @@ def main() -> None:
             print(f"prefix_hit_rate={engine.prefix_hit_rate:.2f} "
                   f"acceptance_length={engine.acceptance_length:.2f} "
                   f"kv={engine.kv.counters}")
+        if args.disaggregate:
+            ts = engine.transfer_stats()
+            print(f"[disagg] link={ts['link']} "
+                  f"transfers={ts['transfers']} "
+                  f"pages={ts['transfer_pages']} "
+                  f"bytes={ts['transfer_bytes']} "
+                  f"stall_boundaries={ts['transfer_stall_boundaries']} "
+                  f"idle_boundaries={ts['decode_idle_boundaries']}")
+            print(f"[disagg] prefill queue depth mean="
+                  f"{ts['prefill_depth_mean']:.2f} "
+                  f"peak={ts['prefill_depth_peak']} | decode queue depth "
+                  f"mean={ts['decode_depth_mean']:.2f} "
+                  f"peak={ts['decode_depth_peak']} | "
+                  f"pool={engine.prefill_pool.stats}")
+        if mesh is not None and engine.sharding_report["dropped_rules"]:
+            print("sharding fallbacks:",
+                  "; ".join(engine.sharding_report["dropped_rules"]))
         return
 
     batch = {"tokens": jnp.asarray(

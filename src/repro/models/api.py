@@ -42,14 +42,16 @@ def prefill_fn(params, batch, cfg: ModelConfig, ctx: ModelContext,
     """``logits_at`` (B,): index of the position whose logits to return
     (decoder-only; lets servers pad prompts to one compile length).
     ``pad_left`` (B,): leading pad count for front-padded state-family
-    prompts (see lm_prefill)."""
+    prompts (see lm_prefill). ``batch["positions"]`` (3,B,S) explicit
+    mrope rows are honored exactly as the training loss honors them."""
     if cfg.is_encoder_decoder:
         if logits_at is not None or pad_left is not None:
             raise NotImplementedError(
                 "logits_at/pad_left require a decoder-only model")
         return encdec.encdec_prefill(params, batch, cfg, ctx, window)
     return lm.lm_prefill(params, batch["tokens"], cfg, ctx, window,
-                         logits_at=logits_at, pad_left=pad_left)
+                         logits_at=logits_at, pad_left=pad_left,
+                         mrope_positions=batch.get("positions"))
 
 
 def decode_fn(params, token, cache, cfg: ModelConfig, ctx: ModelContext):
@@ -59,16 +61,20 @@ def decode_fn(params, token, cache, cfg: ModelConfig, ctx: ModelContext):
 
 
 def decode_span_fn(params, tokens, cache, cfg: ModelConfig,
-                   ctx: ModelContext, logits_at=None):
+                   ctx: ModelContext, logits_at=None,
+                   mrope_positions=None):
     """T-token span decode against dense per-slot caches — the
     chunked-prefill datapath for hybrid (attention + state) stacks.
     ``cache["pos"]`` may be negative: positions < 0 are the dead front
     padding of a right-aligned first chunk (see lm.lm_decode_span).
-    ``logits_at`` (B,) gathers one position's logits before the lm head."""
+    ``logits_at`` (B,) gathers one position's logits before the lm head.
+    ``mrope_positions`` (3,B,T) carries explicit multimodal rope rows for
+    the span (None = text default)."""
     if cfg.is_encoder_decoder:
         raise ValueError(f"{cfg.name}: span decode requires decoder-only")
     return lm.lm_decode_span(params, tokens, cache, cfg, ctx,
-                             logits_at=logits_at)
+                             logits_at=logits_at,
+                             mrope_positions=mrope_positions)
 
 
 def supports_paged_decode(cfg: ModelConfig) -> bool:
@@ -96,17 +102,20 @@ def decode_paged_fn(params, token, state, cfg: ModelConfig,
 
 
 def decode_span_paged_fn(params, tokens, state, cfg: ModelConfig,
-                         ctx: ModelContext, valid=None, logits_at=None):
+                         ctx: ModelContext, valid=None, logits_at=None,
+                         mrope_positions=None):
     """T-token span decode against the paged pool: one batched paged-
     attention call scores T consecutive tokens per request (speculative
     draft-verify; suffix/chunked prefill). ``logits_at`` (B,) gathers a
     single position's logits before the lm head (prefill chunks);
-    ``pos`` in the returned state is unchanged — the caller owns
-    acceptance/rollback (see lm.lm_decode_span_paged)."""
+    ``mrope_positions`` (3,B,T) carries explicit multimodal rope rows
+    (None = text default); ``pos`` in the returned state is unchanged —
+    the caller owns acceptance/rollback (see lm.lm_decode_span_paged)."""
     if not supports_paged_decode(cfg):
         raise ValueError(f"{cfg.name}: no paged decode for this family")
     return lm.lm_decode_span_paged(params, tokens, state, cfg, ctx,
-                                   valid=valid, logits_at=logits_at)
+                                   valid=valid, logits_at=logits_at,
+                                   mrope_positions=mrope_positions)
 
 
 def train_batch_specs(cfg: ModelConfig, batch: int,

@@ -47,7 +47,9 @@ class ModelContext:
     def __init__(self, *, compute_dtype=jnp.bfloat16, q_chunk: int = 2048,
                  shard: ShardFn = _identity_shard, mamba_chunk: int = 256,
                  rwkv_chunk: int = 16, attn_impl: str = "xla",
-                 decode_cache_dtype=None, full_cache_window: bool = False):
+                 decode_cache_dtype=None, full_cache_window: bool = False,
+                 mesh=None, data_axis: str = "data",
+                 model_axis: str = "model"):
         self.compute_dtype = compute_dtype
         self.q_chunk = q_chunk
         self.shard = shard
@@ -59,6 +61,12 @@ class ModelContext:
         # paged serving scatters prefill caches into append-only pages and
         # relies on the attention mask (not the ring) to bound the window
         self.full_cache_window = full_cache_window
+        # serving mesh: when set, the paged kernel wrappers shard_map over
+        # (data_axis, model_axis) so each shard streams its local KV-head
+        # slice of the page pool (see kernels/ops.py)
+        self.mesh = mesh
+        self.data_axis = data_axis
+        self.model_axis = model_axis
 
     @property
     def cache_dtype(self):
@@ -424,13 +432,15 @@ def block_decode(block_params, x, cache, pos, cfg, ctx,
 
 
 def sublayer_decode_span(p, x, cache, pos, live, cfg: ModelConfig,
-                         ctx: ModelContext, idx):
+                         ctx: ModelContext, idx, mrope_positions=None):
     """T-token span decode against dense per-slot caches (all families).
 
     x: (B,T,D) at absolute positions ``pos .. pos+T-1`` (already zeroed
     at dead positions); live: (B,T) bool. Attention caches must be
     append-only views (window >= total length — no ring wrap): k/v write
-    at their absolute slot, dead writes are dropped."""
+    at their absolute slot, dead writes are dropped.
+    ``mrope_positions`` (3,B,T): explicit multimodal rope rows for this
+    span (None = text default, broadcast from the absolute positions)."""
     kind = cfg.sublayer_kinds()[idx]
     dtype = ctx.compute_dtype
     b, t, _ = x.shape
@@ -438,7 +448,7 @@ def sublayer_decode_span(p, x, cache, pos, live, cfg: ModelConfig,
     if kind == "attn":
         q, k, v = _project_qkv(p["core"], h, cfg, dtype)
         posn = pos[:, None] + jnp.arange(t)[None, :]  # (B, T)
-        q, k = apply_positional(q, k, cfg, posn, None)
+        q, k = apply_positional(q, k, cfg, posn, mrope_positions)
         w = cache["k"].shape[1]
         bidx = jnp.arange(b)[:, None]
         # dead positions write out of bounds and are dropped
@@ -483,12 +493,13 @@ def sublayer_decode_span(p, x, cache, pos, live, cfg: ModelConfig,
     return x, new_cache
 
 
-def block_decode_span(block_params, x, cache, pos, live, cfg, ctx):
+def block_decode_span(block_params, x, cache, pos, live, cfg, ctx,
+                      mrope_positions=None):
     new_cache = {}
     for i in range(cfg.block_len):
         x, new_cache[f"sl{i}"] = sublayer_decode_span(
             block_params[f"sl{i}"], x, cache[f"sl{i}"], pos, live, cfg,
-            ctx, i)
+            ctx, i, mrope_positions)
     return x, new_cache
 
 
@@ -558,6 +569,25 @@ def paged_block_cache_spec(cfg: ModelConfig, num_pages: int, page_size: int,
             for i in range(cfg.block_len)}
 
 
+# per-layer page-pool logical axes: pool and scale pages shard on the KV
+# head axis (over "model"); page/slot axes stay replicated so the host page
+# table addresses every shard identically
+PAGE_LOGICAL: Dict[str, Tuple[Optional[str], ...]] = {
+    "k": (None, None, "kv_heads", None),
+    "v": (None, None, "kv_heads", None),
+    "k_scale": (None, None, "kv_heads"),
+    "v_scale": (None, None, "kv_heads"),
+}
+
+
+def _constrain_pages(pages: Dict[str, Array],
+                     ctx: ModelContext) -> Dict[str, Array]:
+    """Pin freshly-written page pools to their logical sharding so scatter
+    updates (and jit donation) keep the KV-head partition stable."""
+    return {name: ctx.shard(arr, PAGE_LOGICAL[name])
+            for name, arr in pages.items()}
+
+
 def _paged_gather(pages: Dict[str, Array], page_table: Array, dtype
                   ) -> Tuple[Array, Array]:
     """Materialize each request's KV view: (B, M*P, KV, D) in ``dtype``."""
@@ -592,6 +622,7 @@ def sublayer_decode_paged(p, x, pages, page_table, pos, cfg: ModelConfig,
     if ks is not None:
         new_pages["k_scale"] = pages["k_scale"].at[pid, slot].set(ks)
         new_pages["v_scale"] = pages["v_scale"].at[pid, slot].set(vs)
+    new_pages = _constrain_pages(new_pages, ctx)
     if ctx.attn_impl in ("pallas", "pallas_interpret"):
         # stream pages straight through the scalar-prefetch Pallas kernel
         # — no HBM materialization of a contiguous per-request cache.
@@ -605,7 +636,8 @@ def sublayer_decode_paged(p, x, pages, page_table, pos, cfg: ModelConfig,
             v_scale=new_pages.get("v_scale"),
             impl=("interpret" if ctx.attn_impl == "pallas_interpret"
                   else "pallas"),
-            window=cfg.sliding_window)[:, None]
+            window=cfg.sliding_window, mesh=ctx.mesh,
+            data_axis=ctx.data_axis, model_axis=ctx.model_axis)[:, None]
     else:
         # jnp gather-dequant oracle (the correctness contract for the
         # kernel route; materializes a contiguous per-request view)
@@ -646,19 +678,22 @@ def block_decode_paged(block_params, x, pages, page_table, pos, cfg, ctx):
 
 
 def sublayer_decode_span_paged(p, x, pages, page_table, pos, live,
-                               cfg: ModelConfig, ctx: ModelContext, idx):
+                               cfg: ModelConfig, ctx: ModelContext, idx,
+                               mrope_positions=None):
     """T-token span decode against the paged pool.
 
     x: (B,T,D) at absolute positions ``pos .. pos+T-1``; live: (B,T)
     bool — False marks padded span slots whose writes are routed to the
-    trash page (suffix prefills pad to a bucketed compile length)."""
+    trash page (suffix prefills pad to a bucketed compile length).
+    ``mrope_positions`` (3,B,T): explicit multimodal rope rows for the
+    span (None = text default)."""
     dtype = ctx.compute_dtype
     b, t, _ = x.shape
     page_size = pages["k"].shape[1]
     h = rms_norm(x, p["ln1"], cfg.norm_eps)
     q, k, v = _project_qkv(p["core"], h, cfg, dtype)
     posn = pos[:, None] + jnp.arange(t)[None, :]  # (B, T)
-    q, k = apply_positional(q, k, cfg, posn, None)
+    q, k = apply_positional(q, k, cfg, posn, mrope_positions)
     bidx = jnp.arange(b)[:, None]
     # page-table reads beyond the row clamp; dead slots write to trash 0
     pid = jnp.where(live, page_table[bidx, posn // page_size], 0)
@@ -671,6 +706,7 @@ def sublayer_decode_span_paged(p, x, pages, page_table, pos, live,
     if ks is not None:
         new_pages["k_scale"] = pages["k_scale"].at[pid, slot].set(ks)
         new_pages["v_scale"] = pages["v_scale"].at[pid, slot].set(vs)
+    new_pages = _constrain_pages(new_pages, ctx)
     if ctx.attn_impl in ("pallas", "pallas_interpret"):
         # same page stream as single-token decode: int8 scale pages DMA
         # through the table, dequantize in VMEM — no gather oracle
@@ -681,7 +717,8 @@ def sublayer_decode_span_paged(p, x, pages, page_table, pos, live,
             v_scale=new_pages.get("v_scale"),
             impl=("interpret" if ctx.attn_impl == "pallas_interpret"
                   else "pallas"),
-            window=cfg.sliding_window)
+            window=cfg.sliding_window, mesh=ctx.mesh,
+            data_axis=ctx.data_axis, model_axis=ctx.model_axis)
     else:
         kg, vg = _paged_gather(new_pages, page_table, dtype)
         out = decode_span_attention(q, kg, vg, pos, cfg)
@@ -698,10 +735,10 @@ def sublayer_decode_span_paged(p, x, pages, page_table, pos, live,
 
 
 def block_decode_span_paged(block_params, x, pages, page_table, pos, live,
-                            cfg, ctx):
+                            cfg, ctx, mrope_positions=None):
     new_pages = {}
     for i in range(cfg.block_len):
         x, new_pages[f"sl{i}"] = sublayer_decode_span_paged(
             block_params[f"sl{i}"], x, pages[f"sl{i}"], page_table, pos,
-            live, cfg, ctx, i)
+            live, cfg, ctx, i, mrope_positions)
     return x, new_pages

@@ -96,7 +96,8 @@ def lm_cache_spec(cfg: ModelConfig, batch: int, window: int,
 def lm_prefill(params: Dict[str, Any], tokens: Array, cfg: ModelConfig,
                ctx: ModelContext, window: int,
                logits_at: Optional[Array] = None,
-               pad_left: Optional[Array] = None
+               pad_left: Optional[Array] = None,
+               mrope_positions: Optional[Array] = None
                ) -> Tuple[Array, Dict[str, Any]]:
     """Full-sequence prefill. Returns (last-token logits, cache).
 
@@ -110,7 +111,10 @@ def lm_prefill(params: Dict[str, Any], tokens: Array, cfg: ModelConfig,
     the recurrent state provably stays at its zero initial value through
     the pad prefix, so servers can pad prompts up to a bucketed compile
     length from the front. Attention sublayers reject it (front padding
-    would shift their positions)."""
+    would shift their positions).
+
+    ``mrope_positions`` (3,B,S): explicit multimodal rope rows, the same
+    contract the training loss uses (None = text default)."""
     b, s = tokens.shape
     x = embed_lookup(params["embed"], tokens, ctx.compute_dtype)
     live = None
@@ -124,7 +128,7 @@ def lm_prefill(params: Dict[str, Any], tokens: Array, cfg: ModelConfig,
 
     def body(x, bp):
         x, new_cache = block_prefill(bp, x, cache0, cfg, ctx,
-                                     seq_mask=live)
+                                     mrope_positions, seq_mask=live)
         return x, new_cache
 
     x, caches = jax.lax.scan(jax.checkpoint(body), x, params["blocks"])
@@ -174,7 +178,8 @@ def _span_logits_slice(x: Array, logits_at: Optional[Array]) -> Array:
 def lm_decode_span(params: Dict[str, Any], tokens: Array,
                    cache: Dict[str, Any], cfg: ModelConfig,
                    ctx: ModelContext,
-                   logits_at: Optional[Array] = None
+                   logits_at: Optional[Array] = None,
+                   mrope_positions: Optional[Array] = None
                    ) -> Tuple[Array, Dict[str, Any]]:
     """T-token span decode against dense per-slot caches (all sublayer
     families) — the chunked-prefill datapath for hybrid (jamba) stacks.
@@ -187,6 +192,8 @@ def lm_decode_span(params: Dict[str, Any], tokens: Array,
     sublayers passes through untouched. Attention caches must hold
     absolute slots (window >= total length; no ring wrap).
     ``logits_at`` (B,): return only that position's logits (B,1,V).
+    ``mrope_positions`` (3,B,T): explicit multimodal rope rows for the
+    span (None = text default, broadcast from absolute positions).
     Returns (logits, new cache with ``pos`` UNCHANGED — the caller owns
     position bookkeeping, exactly like the paged span path)."""
     pos = cache["pos"]
@@ -199,7 +206,8 @@ def lm_decode_span(params: Dict[str, Any], tokens: Array,
 
     def body(x, xs):
         bp, bc = xs
-        x, nc = block_decode_span(bp, x, bc, pos, live, cfg, ctx)
+        x, nc = block_decode_span(bp, x, bc, pos, live, cfg, ctx,
+                                  mrope_positions)
         return x, nc
 
     x, new_blocks = jax.lax.scan(body, x, (params["blocks"],
@@ -256,7 +264,8 @@ def lm_decode_span_paged(params: Dict[str, Any], tokens: Array,
                          state: Dict[str, Any], cfg: ModelConfig,
                          ctx: ModelContext,
                          valid: Optional[Array] = None,
-                         logits_at: Optional[Array] = None
+                         logits_at: Optional[Array] = None,
+                         mrope_positions: Optional[Array] = None
                          ) -> Tuple[Array, Dict[str, Any]]:
     """T-token span decode against the paged pool (speculative verify /
     suffix prefill / chunked cold prefill).
@@ -266,7 +275,10 @@ def lm_decode_span_paged(params: Dict[str, Any], tokens: Array,
     padded tail slots write to the trash page and their logits are
     garbage the caller must ignore. ``logits_at`` (B,): return only
     that position's logits, (B,1,V) — what a prefill chunk wants; spec
-    verify keeps the full (B,T,V). Returns (logits, new state with
+    verify keeps the full (B,T,V). ``mrope_positions`` (3,B,T): explicit
+    multimodal rope rows for the span (None = text default — broadcast
+    absolute positions, exactly what text-only mrope prompts want).
+    Returns (logits, new state with
     ``pos`` UNCHANGED — acceptance/rollback bookkeeping is the
     caller's: accepted tokens advance the position frontier, rejected
     ones are simply never covered by it)."""
@@ -282,7 +294,7 @@ def lm_decode_span_paged(params: Dict[str, Any], tokens: Array,
     def body(x, xs):
         bp, layer_pages = xs
         x, np_ = block_decode_span_paged(bp, x, layer_pages, table, pos,
-                                         live, cfg, ctx)
+                                         live, cfg, ctx, mrope_positions)
         return x, np_
 
     x, new_pages = jax.lax.scan(body, x, (params["blocks"], state["pages"]))

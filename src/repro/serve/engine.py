@@ -49,6 +49,8 @@ docs/serving.md for lifecycle diagrams of all three subsystems.
 from __future__ import annotations
 
 import dataclasses
+import logging
+import math
 from functools import partial
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -56,16 +58,70 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import hwspec
+from repro.core.topology import Torus
 from repro.models import api
 from repro.models.blocks import ModelContext
 from repro.models.config import ModelConfig
+from repro.models.params import axes_tree
 from repro.serve.kv_cache import DenseKVCache, PagedKVCache
-from repro.serve.scheduler import ContinuousBatchingScheduler, Request
+from repro.serve.scheduler import (ContinuousBatchingScheduler,
+                                   PrefillWorkerPool, Request)
+from repro.sharding.axes import (AxisRules, RULE_SETS, logical_constraint,
+                                 summarize_dropped, tree_shardings)
 
 Array = jax.Array
 PyTree = Any
 
 PAD_TOKEN = -1  # emitted by finished slots inside a chunk
+
+log = logging.getLogger(__name__)
+
+# modeled one-way software+wire latency of the prefill->decode handoff
+_LINK_LATENCY_S = {"ici": 1.0e-6, "dcn": 50.0e-6}
+# DCN-class bandwidth as a fraction of one ICI link direction (the paper's
+# cross-pod federation rides data-center network, not ICI)
+_DCN_LINK_FRACTION = 0.25
+
+
+class PageTransferModel:
+    """Modeled prefill->decode KV-page handoff for disaggregated serving.
+
+    The two roles are modeled as slices of the same generation joined by a
+    2-ring (one hop): an "ici" link for intra-pod disaggregation, or a
+    DCN-class path (lower bandwidth, higher latency) for the paper's
+    cross-pod federation. Transfer time = link latency + bytes / the
+    ring's bisection bandwidth (core/topology.py), quantized to decode
+    chunk boundaries against an HBM-roofline estimate of boundary time —
+    so short prompts hide in one boundary while long cold prompts stall
+    their slot for several."""
+
+    def __init__(self, *, page_bytes: int, chunk: int, resident_bytes: int,
+                 hw: str = "tpu_v5e", link: str = "ici"):
+        if link not in _LINK_LATENCY_S:
+            raise ValueError(
+                f"transfer link must be one of {sorted(_LINK_LATENCY_S)}, "
+                f"got {link!r}")
+        spec = hwspec.get(hw)
+        gbps = spec.ici_link_gbps * (1.0 if link == "ici"
+                                     else _DCN_LINK_FRACTION)
+        self.link = link
+        self.torus = Torus(dims=(2,), link_gbps=gbps)
+        self.latency_s = _LINK_LATENCY_S[link]
+        self.page_bytes = page_bytes
+        # decode boundary walltime: ``chunk`` steps, each streaming the
+        # resident KV working set once (memory-bound decode roofline)
+        self.boundary_s = chunk * resident_bytes / (spec.hbm_gbps * 1e9)
+
+    def transfer_s(self, n_pages: int) -> float:
+        bw = self.torus.bisection_gbps() * 1e9  # bytes/s across the hop
+        return self.latency_s + n_pages * self.page_bytes / bw
+
+    def delay_boundaries(self, n_pages: int) -> int:
+        """Whole decode boundaries the pages are in flight (>= 1: a
+        handoff is never visible inside the boundary that issued it)."""
+        return max(1, math.ceil(self.transfer_s(max(1, n_pages))
+                                / self.boundary_s))
 
 
 @dataclasses.dataclass
@@ -76,7 +132,23 @@ class ServeEngine:
     requires the paged backend). ``prefix_cache``: share prompt-prefix
     pages across requests (None -> on whenever paged).
     ``prefill_chunk``: span size for chunked prefill (clamped to the
-    window; the final partial chunk buckets to pow2)."""
+    window; the final partial chunk buckets to pow2).
+
+    ``mesh``: a (data, model) ``jax.sharding.Mesh`` — when set, every
+    prefill/decode/span program compiles under NamedSharding: KV-head
+    pools shard over "model" (GQA replicating via the AxisRules
+    divisibility fallback, reported once in ``dropped_rules``), batch
+    slots over "data", host bookkeeping replicated. ``rules`` is an
+    AxisRules or a RULE_SETS name.
+
+    ``disaggregate``: prefill/decode disaggregation (paged only) —
+    ``prefill_workers`` dedicated workers chunk-prefill cold prompts
+    (placed by queue depth) and hand finished pages to the decode side
+    over a modeled ``transfer_link`` ("ici" intra-pod | "dcn" cross-pod)
+    of hardware generation ``transfer_hw``; arriving slots stay *parked*
+    (frozen, token-identical on activation) until the modeled transfer
+    lands, and the traffic/stall accounting shows up in
+    ``transfer_stats()``."""
 
     cfg: ModelConfig
     ctx: ModelContext
@@ -91,6 +163,12 @@ class ServeEngine:
     draft_k: int = 0
     prefix_cache: Optional[bool] = None
     prefill_chunk: int = 128  # span size for chunked prefill
+    mesh: Any = None  # serving mesh (None -> single host)
+    rules: Any = "baseline_dp_tp"  # AxisRules or RULE_SETS name
+    disaggregate: bool = False
+    prefill_workers: int = 1
+    transfer_link: str = "ici"  # "ici" | "dcn"
+    transfer_hw: str = "tpu_v5e"  # hwspec generation for the transfer
 
     def __post_init__(self) -> None:
         cfg, ctx = self.cfg, self.ctx
@@ -107,6 +185,20 @@ class ServeEngine:
             self.prefix_cache = self.paged
         if self.prefix_cache and not self.paged:
             raise ValueError("prefix caching requires the paged KV backend")
+        if self.disaggregate and not self.paged:
+            raise ValueError("prefill/decode disaggregation requires the "
+                             "paged KV backend (pages are the handoff unit)")
+        if self.prefill_workers < 1:
+            raise ValueError("prefill_workers must be >= 1")
+        if isinstance(self.rules, str):
+            self.rules = RULE_SETS[self.rules]
+        if not isinstance(self.rules, AxisRules):
+            raise ValueError(f"rules must be AxisRules or one of "
+                             f"{sorted(RULE_SETS)}")
+        self.dropped_rules: List[str] = []
+        self._dropped_raw: List[Tuple[str, int]] = []
+        if self.mesh is not None:
+            self.ctx = ctx = self._mesh_context(ctx)
         self.counters = {"prefills": 0, "chunks": 0, "decode_steps": 0,
                          "host_syncs": 0, "pertoken_steps": 0,
                          "pages_trimmed": 0, "suffix_prefills": 0,
@@ -127,9 +219,13 @@ class ServeEngine:
                 self.num_pages = 1 + self.max_batch * self.pages_per_seq
             self.kv: Any = PagedKVCache(
                 cfg, ctx, self.num_pages, self.page_size, self.max_batch,
-                self.pages_per_seq)
+                self.pages_per_seq, mesh=self.mesh, rules=self.rules,
+                dropped=self._dropped_raw)
         else:
-            self.kv = DenseKVCache(cfg, ctx, self.window, self.max_batch)
+            self.kv = DenseKVCache(cfg, ctx, self.window, self.max_batch,
+                                   mesh=self.mesh, rules=self.rules,
+                                   dropped=self._dropped_raw)
+        self._note_dropped()
         # Pure state-family stacks (mamba/rwkv) carry O(1) state, so the
         # dense prefill would otherwise compile once per prompt length.
         # Front-padding to power-of-two buckets (masked embeddings; the
@@ -146,19 +242,110 @@ class ServeEngine:
         # so attention needs no front padding and every prompt length
         # reuses ONE compiled program. Requires append-only (non-ring)
         # caches, so SWA archs whose window exceeds the serve window are
-        # excluded, as is mrope (its positions arrive as extras).
+        # excluded. mrope positions thread through the span paths (sliced
+        # per chunk from the request's extras).
         self.chunk_prefill = (not self.paged
                               and not self.bucket_prefill
                               and not cfg.is_encoder_decoder
-                              and cfg.pos_emb != "mrope"
                               and (cfg.sliding_window is None
                                    or self.window <= cfg.sliding_window))
         # span size for chunked prefill (paged cold + suffix, dense)
         self.span_len = max(1, min(self.prefill_chunk, self.window))
         self.prefill_bucket_sizes: set = set()
         self._use_spec = False  # per-run: draft_k > 0 and greedy temp
+        # disaggregation state: parked slots (admitted but frozen while
+        # their modeled page transfer is in flight) and traffic counters
+        self._parked: Dict[int, int] = {}
+        self.transfer_model: Optional[PageTransferModel] = None
+        if self.disaggregate:
+            self.page_bytes = self.kv.per_token_bytes() * self.page_size
+            self.transfer_model = PageTransferModel(
+                page_bytes=self.page_bytes, chunk=self.chunk,
+                resident_bytes=self.max_batch * self.window
+                * self.kv.per_token_bytes(),
+                hw=self.transfer_hw, link=self.transfer_link)
+        self.disagg_stats = {
+            "transfers": 0, "transfer_pages": 0, "transfer_bytes": 0,
+            "transfer_stall_boundaries": 0, "decode_idle_boundaries": 0,
+            "boundaries": 0, "prefill_depth_sum": 0,
+            "prefill_depth_peak": 0, "decode_depth_sum": 0,
+            "decode_depth_peak": 0}
         self._build_jitted()
         self._reset_carry()
+
+    # ----------------------------------------------------------- mesh wiring
+
+    def _mesh_context(self, ctx: ModelContext) -> ModelContext:
+        """Rebuild the model context with the serving mesh threaded in:
+        ``shard`` becomes a logical_constraint against (mesh, rules) so
+        every activation/page annotation resolves under GSPMD, and the
+        mesh/axis names ride along for the shard_map'd paged kernels."""
+        mesh, rules = self.mesh, self.rules
+
+        def shard(x: Array, logical: Tuple[Optional[str], ...]) -> Array:
+            return logical_constraint(x, logical, mesh, rules)
+
+        return ModelContext(
+            compute_dtype=ctx.compute_dtype, q_chunk=ctx.q_chunk,
+            shard=shard, mamba_chunk=ctx.mamba_chunk,
+            rwkv_chunk=ctx.rwkv_chunk, attn_impl=ctx.attn_impl,
+            decode_cache_dtype=ctx.decode_cache_dtype,
+            full_cache_window=ctx.full_cache_window, mesh=mesh,
+            data_axis="data", model_axis="model")
+
+    def _note_dropped(self, raw=None) -> None:
+        """Fold freshly-recorded divisibility fallbacks into the one-time
+        report: visible in logs at WARNING and in ``sharding_report``."""
+        if self.mesh is None:
+            return
+        if raw is not None:
+            self._dropped_raw.extend(raw)
+        lines = summarize_dropped(self._dropped_raw, self.mesh, self.rules)
+        new = [ln for ln in lines if ln not in self.dropped_rules]
+        if new:
+            self.dropped_rules.extend(new)
+            log.warning("serve sharding fallbacks (%s on %s): %s",
+                        self.rules.name, self.cfg.name, "; ".join(new))
+
+    @property
+    def sharding_report(self) -> Dict[str, Any]:
+        """Mesh layout + every dropped-rule fallback seen so far."""
+        if self.mesh is None:
+            return {"mesh": None, "rules": self.rules.name,
+                    "dropped_rules": []}
+        return {"mesh": dict(zip(self.mesh.axis_names,
+                                 self.mesh.devices.shape)),
+                "rules": self.rules.name,
+                "dropped_rules": list(self.dropped_rules)}
+
+    def shard_params(self, params: PyTree) -> PyTree:
+        """device_put the parameter tree onto the serving mesh per the
+        logical rules (identity without a mesh). ``run()`` applies this
+        automatically; calling it once up front skips the first-boundary
+        transfer. Already-placed trees are a no-op device_put."""
+        if self.mesh is None:
+            return params
+        logical = axes_tree(api.model_specs(self.cfg))
+        shapes = jax.tree.map(lambda p: p.shape, params)
+        raw: List[Tuple[str, int]] = []
+        shardings = tree_shardings(logical, shapes, self.mesh, self.rules,
+                                   raw)
+        out = jax.device_put(params, shardings)
+        self._note_dropped(raw)
+        return out
+
+    def transfer_stats(self) -> Dict[str, float]:
+        """Disaggregation traffic/stall/queue-depth accounting (empty
+        dict when ``disaggregate`` is off)."""
+        if not self.disaggregate:
+            return {}
+        st = dict(self.disagg_stats)
+        n = max(1, st.pop("boundaries"))
+        st["prefill_depth_mean"] = st.pop("prefill_depth_sum") / n
+        st["decode_depth_mean"] = st.pop("decode_depth_sum") / n
+        st["transfer_s_per_page"] = self.transfer_model.transfer_s(1)
+        st["link"] = self.transfer_link
+        return st
 
     # ------------------------------------------------------------ jit build
 
@@ -249,7 +436,7 @@ class ServeEngine:
         # every prompt length (the trace-time counter below is the
         # compile-count regression probe).
         def prefill_span(params, pages, span, table, pos0, valid, key,
-                         temp):
+                         temp, mrope=None):
             self.counters["span_prefill_compiles"] += 1  # trace-time
             state = {"pages": pages, "page_table": table, "pos": pos0}
             # only the chunk's last real token needs logits: the gather
@@ -257,7 +444,8 @@ class ServeEngine:
             # (1, 1, V) per chunk, not (1, span, V)
             idx = jnp.clip(valid - 1, 0, span.shape[1] - 1)
             logits, new_state = api.decode_span_paged_fn(
-                params, span, state, cfg, ctx, valid=valid, logits_at=idx)
+                params, span, state, cfg, ctx, valid=valid, logits_at=idx,
+                mrope_positions=mrope)
             first = self._pick(logits, key, temp)
             return first, new_state["pages"]
 
@@ -268,7 +456,8 @@ class ServeEngine:
         # carries (dead) front padding, flagged by pos < 0 inside
         # lm_decode_span — attention writes drop, recurrent state threads
         # through chunks untouched by the pad.
-        def prefill_span_dense(params, cache, span, pos0, key, temp):
+        def prefill_span_dense(params, cache, span, pos0, key, temp,
+                               mrope=None):
             self.counters["span_prefill_dense_compiles"] += 1  # trace-time
             state = dict(cache)
             state["pos"] = pos0
@@ -276,7 +465,8 @@ class ServeEngine:
             # are gathered before the lm head (see prefill_span)
             last = jnp.full((span.shape[0],), span.shape[1] - 1, jnp.int32)
             logits, new_state = api.decode_span_fn(
-                params, span, state, cfg, ctx, logits_at=last)
+                params, span, state, cfg, ctx, logits_at=last,
+                mrope_positions=mrope)
             first = self._pick(logits, key, temp)
             return first, {"blocks": new_state["blocks"]}
 
@@ -447,14 +637,17 @@ class ServeEngine:
         return min(cap, max(4, 1 << (t - 1).bit_length()))
 
     def _span_prefill_paged(self, params, slot: int, tokens: np.ndarray,
-                            start: int, key: Array, temp: Array) -> Array:
+                            start: int, key: Array, temp: Array,
+                            mrope: Optional[np.ndarray] = None) -> Array:
         """Prefill ``tokens`` at absolute positions ``start..`` through
         the span-decode datapath in fixed-size chunks — cold prompts
         (start=0) and cached-prefix suffixes (start=cached) share the
         same compiled program family (full-span program + pow2 buckets
         for the final partial chunk). Back padding inside a partial
         chunk writes to the trash page; logits index the final real
-        token."""
+        token. ``mrope`` (3, S_total) carries the request's explicit
+        multimodal rope rows indexed by *absolute* token position; each
+        chunk slices its window (pad slots are dead: zero rows)."""
         s_len = self.span_len
         if not self.kv.ensure_private(slot, start, self._copy_page):
             raise RuntimeError("page pool exhausted during CoW fork")
@@ -465,23 +658,31 @@ class ServeEngine:
             b_len = self._pow2_bucket(t, s_len)
             span = np.zeros((1, b_len), np.int32)
             span[0, :t] = tokens[i:i + t]
+            chunk_m = None
+            if mrope is not None:
+                cm = np.zeros((3, 1, b_len), np.int32)
+                cm[:, 0, :t] = mrope[:, start + i:start + i + t]
+                chunk_m = jnp.asarray(cm)
             first, self.kv.pages = self._prefill_span(
                 params, self.kv.pages, jnp.asarray(span),
                 self.kv.table_row(slot),
                 jnp.full((1,), start + i, jnp.int32),
-                jnp.full((1,), t, jnp.int32), key, temp)
+                jnp.full((1,), t, jnp.int32), key, temp, chunk_m)
             self.counters["prefill_span_calls"] += 1
             i += t
         return first
 
     def _span_prefill_dense(self, params, slot: int, tokens: np.ndarray,
-                            key: Array, temp: Array) -> Array:
+                            key: Array, temp: Array,
+                            mrope: Optional[np.ndarray] = None) -> Array:
         """Chunked prefill on the dense backend (hybrid stacks): the
         prompt is RIGHT-aligned into fixed-size spans so only the first
         chunk is (front-)padded — dead positions sit at negative absolute
         positions, attention stays absolute-positioned, and recurrent
         state threads through the chunks. The first (partial) chunk
-        buckets to pow2; every other chunk reuses the full-span program."""
+        buckets to pow2; every other chunk reuses the full-span program.
+        ``mrope`` (3, S) explicit rope rows; the dead front pad gets zero
+        rows (its writes are dropped anyway)."""
         s_len = self.span_len
         s = len(tokens)
         r = s % s_len or min(s, s_len)  # first (partial) chunk tokens
@@ -489,6 +690,10 @@ class ServeEngine:
         pad = b0 - r
         padded = np.zeros((1, pad + s), np.int32)
         padded[0, pad:] = tokens
+        m_full = None
+        if mrope is not None:
+            m_full = np.zeros((3, pad + s), np.int32)
+            m_full[:, pad:] = mrope[:, :s]
         cache = {"blocks": jax.tree.map(
             lambda sd: jnp.zeros(sd.shape, sd.dtype),
             api.cache_spec(self.cfg, 1, self.window, self.ctx)["blocks"])}
@@ -496,13 +701,33 @@ class ServeEngine:
         i = 0
         while i < padded.shape[1]:
             b_len = b0 if i == 0 else s_len
+            chunk_m = (None if m_full is None else
+                       jnp.asarray(m_full[:, None, i:i + b_len]))
             first, cache = self._prefill_span_dense(
                 params, cache, jnp.asarray(padded[:, i:i + b_len]),
-                jnp.full((1,), i - pad, jnp.int32), key, temp)
+                jnp.full((1,), i - pad, jnp.int32), key, temp, chunk_m)
             self.counters["prefill_span_calls"] += 1
             i += b_len
         self.kv.write_prefill(self._write_dense, slot, cache)
         return first
+
+    def _req_mrope(self, req: Request, s: int) -> Optional[np.ndarray]:
+        """(3, S) absolute-indexed mrope rows for a resume prompt of
+        length ``s``: the request's explicit positions, extended past the
+        original prompt (generated tokens folded in on resume) by the
+        standard max(pos)+1 text continuation."""
+        if self.cfg.pos_emb != "mrope":
+            return None
+        v = req.extras.get("positions")
+        if v is None:
+            return None  # text default: span paths broadcast positions
+        m = np.asarray(v, np.int32).reshape(3, -1)
+        if m.shape[1] < s:
+            tail = int(m.max()) + 1 + np.arange(s - m.shape[1],
+                                                dtype=np.int32)
+            m = np.concatenate(
+                [m, np.broadcast_to(tail, (3, tail.size))], axis=1)
+        return m[:, :s]
 
     def _admit_into_slot(self, params, req: Request, slot: int,
                          key: Array, temp: Array) -> None:
@@ -511,15 +736,17 @@ class ServeEngine:
         self.counters["prefills"] += 1
         pkey = self._prefill_key(key, req.rid)
         cached = req.cached_prefix_len if self.paged else 0
+        mrope = self._req_mrope(req, s)
         if self.paged:
             # every paged prefill is a chunked span prefill; a prefix hit
             # just starts past the adopted pages (suffix-only compute)
             first = self._span_prefill_paged(params, slot, rp[cached:],
-                                             cached, pkey, temp)
+                                             cached, pkey, temp, mrope)
             if cached > 0:
                 self.counters["suffix_prefills"] += 1
-        elif self.chunk_prefill and not req.extras:
-            first = self._span_prefill_dense(params, slot, rp, pkey, temp)
+        elif self.chunk_prefill and not (req.extras.keys() - {"positions"}):
+            first = self._span_prefill_dense(params, slot, rp, pkey, temp,
+                                             mrope)
         elif self.bucket_prefill and not req.extras:
             sb = 1 << max(3, (s - 1).bit_length())  # pow2 >= s, floor 8
             self.prefill_bucket_sizes.add(sb)
@@ -535,9 +762,12 @@ class ServeEngine:
                 batch[k] = jnp.asarray(v)
             first, cache = self._prefill_dense(params, batch, pkey, temp)
             self.kv.write_prefill(self._write_dense, slot, cache)
-        if self.paged and self.prefix_cache:
+        if self.paged and self.prefix_cache and mrope is None:
             # publish the full prompt pages so later admissions (and this
-            # request's own resume after a preemption) can share them
+            # request's own resume after a preemption) can share them.
+            # Explicit-mrope requests never publish (or adopt): the index
+            # is content-addressed on tokens alone, and the same tokens
+            # under different position rows hold different KV.
             self.kv.register_prefix(slot, rp)
         if self.draft_k and self._use_spec:
             row = np.zeros(self.window + self.draft_k + 1, np.int32)
@@ -575,6 +805,7 @@ class ServeEngine:
             key: Optional[Array] = None,
             temperature: Optional[float] = None) -> Dict[int, np.ndarray]:
         """Drain all requests; returns {rid: generated tokens}."""
+        params = self.shard_params(params)  # no-op without a mesh
         sched = ContinuousBatchingScheduler(self.max_batch)
         self.scheduler = sched
         key = key if key is not None else jax.random.key(0)
@@ -588,10 +819,43 @@ class ServeEngine:
         # they never pay for the (1 + draft_k)-query span
         self._use_spec = bool(self.draft_k) and float(temp) <= 0.0
         self._reset_carry()
+        pool: Optional[PrefillWorkerPool] = None
+        if self.disaggregate:
+            pool = PrefillWorkerPool(self.prefill_workers, self.span_len,
+                                     self.chunk)
+            self.prefill_pool = pool
+            self._parked = {}
         clock = 0
         # max tokens one decode step can emit
         per_step = 1 + self.draft_k if self._use_spec else 1
-        while sched.has_work():
+        while sched.has_work() or (pool is not None and pool.pending()):
+            if pool is not None:
+                # 0) disaggregation bookkeeping: activate parked slots
+                #    whose modeled page transfer has landed (rewriting the
+                #    frozen position's k/v is idempotent — see chunk_body's
+                #    freeze contract — so activation is token-identical to
+                #    co-located admission); route cold arrivals to the
+                #    shallowest prefill worker queue; surface finished
+                #    prefills back into the decode-side admission queue.
+                for slot, ready in list(self._parked.items()):
+                    if clock >= ready:
+                        del self._parked[slot]
+                        self._done = self._done.at[slot].set(False)
+                for r in [r for r in sched.waiting
+                          if r.arrival <= clock and not r.prefill_done]:
+                    sched.waiting.remove(r)
+                    pool.place(r, clock)
+                for r in pool.pop_ready(clock):
+                    sched.add(r)
+                st = self.disagg_stats
+                st["boundaries"] += 1
+                depth = sum(pool.depths())
+                st["prefill_depth_sum"] += depth
+                st["prefill_depth_peak"] = max(st["prefill_depth_peak"],
+                                               depth)
+                st["decode_depth_sum"] += len(sched.waiting)
+                st["decode_depth_peak"] = max(st["decode_depth_peak"],
+                                              len(sched.waiting))
             # 1) page headroom for running slots; preempt youngest on
             #    pressure (its pages free up for the older requests)
             if self.paged:
@@ -618,6 +882,9 @@ class ServeEngine:
                         sched.preempt(victim)
                         self.kv.release(vslot)
                         self._done = self._done.at[vslot].set(True)
+                        # a parked victim's in-flight transfer is moot:
+                        # its pages are gone; it re-prefills on resume
+                        self._parked.pop(vslot, None)
                         if vslot == slot:
                             break  # we were the youngest: self-preempted
             # 2) admissions into free slots (never preempt to admit)
@@ -629,13 +896,18 @@ class ServeEngine:
                 slot = slots[0]
                 if self.paged:
                     rp = req.resume_prompt()
-                    cached, pids = ((0, []) if not self.prefix_cache
+                    # explicit-mrope requests bypass the content-addressed
+                    # prefix index (same tokens, different position rows
+                    # => different KV)
+                    use_pc = (self.prefix_cache
+                              and "positions" not in req.extras)
+                    cached, pids = ((0, []) if not use_pc
                                     else self.kv.lookup_prefix(rp))
                     if cached:
                         self.kv.adopt_prefix(slot, pids)
                     need = len(rp) + self.chunk * per_step + 1
                     if not self.kv.grow(slot, min(need, self.window)):
-                        if self.prefix_cache:
+                        if use_pc:
                             # undo adoption AND its counter bumps: the
                             # retry next boundary repeats the lookup
                             self.kv.abort_adoption(slot, cached, pids)
@@ -645,15 +917,43 @@ class ServeEngine:
                     self.counters["cached_prompt_tokens"] += cached
                 sched.admit(req, slot)
                 self._admit_into_slot(params, req, slot, key, temp)
+                if pool is not None:
+                    # the prefill ran on the prefill role; its finished
+                    # pages now cross the modeled link. Park the slot
+                    # (frozen exactly like a finished one) until the
+                    # transfer's boundary count elapses.
+                    moved = (self.kv.pages_for(len(rp))
+                             - cached // self.page_size)
+                    delay = self.transfer_model.delay_boundaries(moved)
+                    self._parked[slot] = clock + delay * self.chunk
+                    self._done = self._done.at[slot].set(True)
+                    st = self.disagg_stats
+                    st["transfers"] += 1
+                    st["transfer_pages"] += moved
+                    st["transfer_bytes"] += moved * self.page_bytes
             if not sched.running:
                 if sched.next_admittable(clock) is not None:
                     raise RuntimeError(
                         "admission stalled with an empty batch: the page "
                         "pool cannot hold one request (shrink window or "
                         "grow num_pages)")
+                if pool is not None and pool.pending():
+                    clock += self.chunk  # prefill workers still cooking
+                    continue
                 # idle: jump the trace clock to the next arrival
                 nxt = min(r.arrival for r in sched.waiting)
                 clock = max(clock + self.chunk, nxt)
+                continue
+            if (pool is not None and sched.running
+                    and all(s in self._parked for s in sched.running)):
+                # every running slot is frozen in transfer: the decode
+                # role is idle, so skip the device chunk entirely (frozen
+                # slots emit nothing and their state is untouched — the
+                # skip is token-identical) and just advance the clock.
+                clock += self.chunk
+                st = self.disagg_stats
+                st["transfer_stall_boundaries"] += 1
+                st["decode_idle_boundaries"] += 1
                 continue
             # 3) one device-resident chunk
             sched.record_occupancy(len(sched.running))
@@ -683,11 +983,18 @@ class ServeEngine:
             clock += self.chunk
             self.counters["chunks"] += 1
             self.counters["decode_steps"] += self.chunk
+            if pool is not None and self._parked:
+                st = self.disagg_stats
+                st["transfer_stall_boundaries"] += 1
+                if all(s in self._parked for s in sched.running):
+                    st["decode_idle_boundaries"] += 1
             # 4) drain: the single host sync per chunk
             toks_h, done_h, pos_h = jax.device_get(
                 (toks, self._done, self._pos))
             self.counters["host_syncs"] += 1
             for slot in list(sched.running):
+                if slot in self._parked:
+                    continue  # frozen in transfer: emitted PADs only
                 req = sched.running[slot]
                 if self._use_spec:
                     # toks_h[slot]: (chunk, 1+draft_k); emitted tokens
@@ -709,7 +1016,8 @@ class ServeEngine:
                 if finished:
                     sched.complete(slot)
                     if self.paged:
-                        if self.prefix_cache:
+                        if (self.prefix_cache
+                                and "positions" not in req.extras):
                             # publish generated pages too: multi-turn
                             # prompts extending this output will hit
                             self.kv.register_prefix(
@@ -739,7 +1047,10 @@ class ServeEngine:
         reqs = []
         for i in range(b):
             req = Request(rid=i, prompt=tokens[i], max_new=max_new)
-            req.extras = {k: np.asarray(v[i:i + 1])
+            # mrope "positions" are (3, B, S): the batch axis is axis 1
+            req.extras = {k: (np.asarray(v)[:, i:i + 1]
+                              if k == "positions"
+                              else np.asarray(v[i:i + 1]))
                           for k, v in batch.items() if k != "tokens"}
             reqs.append(req)
         out = self.run(params, reqs, key=key, temperature=temperature)

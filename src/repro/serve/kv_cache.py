@@ -58,8 +58,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import api
-from repro.models.blocks import ModelContext
+from repro.models.blocks import CACHE_LOGICAL, PAGE_LOGICAL, ModelContext
 from repro.models.config import ModelConfig
+from repro.sharding.axes import AxisRules, logical_sharding
 
 Array = jax.Array
 PyTree = Any
@@ -69,6 +70,28 @@ _CHAIN_SEED = 0xA5A5A5A5
 
 def _zeros(spec: PyTree) -> PyTree:
     return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+
+
+def _place_named_tree(tree: PyTree, logical_of, mesh, rules: AxisRules,
+                      dropped) -> PyTree:
+    """device_put every leaf of a {name: array} tree (nested dicts ok)
+    onto ``mesh`` per its logical axes; a leading extra dim (stacking over
+    blocks/layers) is treated as replicated. Appends divisibility
+    fallbacks to ``dropped``."""
+    def walk(node):
+        if isinstance(node, dict):
+            return {k: walk_named(k, v) if not isinstance(v, dict)
+                    else walk(v) for k, v in node.items()}
+        return node
+
+    def walk_named(key, arr):
+        logical = logical_of(key) or (None,) * arr.ndim
+        if len(arr.shape) == len(logical) + 1:  # stacked over blocks
+            logical = (None, *logical)
+        sh = logical_sharding(logical, arr.shape, mesh, rules, dropped)
+        return jax.device_put(arr, sh)
+
+    return walk(tree)
 
 
 @dataclasses.dataclass
@@ -81,6 +104,15 @@ class PagedKVCache:
     page_size: int
     max_batch: int
     max_pages_per_seq: int
+    # serving mesh: when set, the page pool (and int8 scale pages) are
+    # laid out sharded on the KV-head axis over "model" per ``rules``,
+    # while ALL host bookkeeping (table / refcounts / prefix index /
+    # frontier) stays replicated — prefix caching, CoW, and speculation
+    # never see the mesh. Divisibility fallbacks (GQA KV replication)
+    # are appended to ``dropped`` for the engine's one-time report.
+    mesh: Any = None
+    rules: Optional[AxisRules] = None
+    dropped: Optional[List[Tuple[str, int]]] = None
 
     def __post_init__(self) -> None:
         spec = api.paged_state_spec(
@@ -88,6 +120,13 @@ class PagedKVCache:
             self.max_pages_per_seq, self.ctx)
         state = _zeros(spec)
         self.pages: PyTree = state["pages"]
+        self._repl = None
+        if self.mesh is not None:
+            self.pages = _place_named_tree(
+                self.pages, PAGE_LOGICAL.get, self.mesh, self.rules,
+                self.dropped)
+            self._repl = jax.sharding.NamedSharding(
+                self.mesh, jax.sharding.PartitionSpec())
         # page 0 is the trash page: never allocated
         self._free: List[int] = list(range(self.num_pages - 1, 0, -1))
         # host mirror of the table; pushed to device on change
@@ -208,12 +247,16 @@ class PagedKVCache:
         self._frontier[slot] = 0
 
     def table_device(self) -> Array:
+        if self._repl is not None:  # host table broadcast to every shard
+            return jax.device_put(jnp.asarray(self._table), self._repl)
         return jnp.asarray(self._table)
 
     def table_row(self, slot: int) -> Array:
         """The slot's page-table row as a (1, M) device array (the batch
         view a single-request span prefill expects)."""
-        return jnp.asarray(self._table[slot:slot + 1])
+        row = jnp.asarray(self._table[slot:slot + 1])
+        return (row if self._repl is None
+                else jax.device_put(row, self._repl))
 
     # ------------------------------------------------------- prefix cache
 
@@ -366,11 +409,20 @@ class DenseKVCache:
     ctx: ModelContext
     window: int
     max_batch: int
+    mesh: Any = None
+    rules: Optional[AxisRules] = None
+    dropped: Optional[List[Tuple[str, int]]] = None
 
     def __post_init__(self) -> None:
         spec = api.cache_spec(self.cfg, self.max_batch, self.window,
                               self.ctx)
         self.cache: PyTree = _zeros(spec)
+        if self.mesh is not None:
+            # batch rows over "data", KV heads over "model" (same logical
+            # table as training checkpoints use; see blocks.CACHE_LOGICAL)
+            self.cache = _place_named_tree(
+                self.cache, CACHE_LOGICAL.get, self.mesh, self.rules,
+                self.dropped)
 
     def state(self, pos: Array) -> Dict[str, Any]:
         cache = dict(self.cache)

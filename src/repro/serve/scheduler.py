@@ -43,9 +43,13 @@ class Request:
         if self.max_new < 1:
             raise ValueError("max_new must be >= 1")
         self.generated: List[int] = []
-        self.state = "waiting"  # waiting | running | finished
+        self.state = "waiting"  # waiting | prefilling | running | finished
         self.slot: int = -1
         self.preemptions = 0
+        # disaggregated mode: True once a prefill worker finished this
+        # request's prompt (it may enter decode admission); reset on
+        # preemption — the released pages must be re-prefilled.
+        self.prefill_done = False
         # tokens served from the prefix cache at the latest admission
         # (set by the engine; the prefill computed only the suffix)
         self.cached_prefix_len = 0
@@ -114,6 +118,7 @@ class ContinuousBatchingScheduler:
         del self.running[req.slot]
         req.state, req.slot = "waiting", -1
         req.preemptions += 1
+        req.prefill_done = False  # pages dropped: must re-prefill
         self.stats["preemptions"] += 1
         self.add(req)
 
@@ -125,3 +130,64 @@ class ContinuousBatchingScheduler:
     @property
     def mean_occupancy(self) -> float:
         return float(np.mean(self._occupancy)) if self._occupancy else 0.0
+
+
+class PrefillWorkerPool:
+    """Dedicated prefill workers for prefill/decode disaggregation.
+
+    Cold prompts are placed on the shallowest worker queue; each worker
+    chunk-prefills its queue in FIFO order at one span per engine chunk
+    (the same chunked-prefill cadence the co-located engine uses), so a
+    prompt of S tokens occupies its worker for ``ceil(S / span_len)``
+    chunk boundaries. ``pop_ready`` releases finished prompts back to
+    the decode scheduler; the engine then models the page transfer
+    (ICI/DCN) before the decode slot goes live.
+
+    Purely host-side queueing — the actual prefill compute still runs
+    through the engine's span-prefill program at admission; this pool
+    models *when* that work happened on the prefill workers and keeps
+    per-role queue-depth statistics.
+    """
+
+    def __init__(self, n_workers: int, span_len: int, chunk: int):
+        if n_workers < 1:
+            raise ValueError("n_workers must be >= 1")
+        self.n_workers = n_workers
+        self.span_len = max(span_len, 1)
+        self.chunk = max(chunk, 1)
+        # per-worker FIFO of (ready_at_clock, request)
+        self.queues: List[List[tuple]] = [[] for _ in range(n_workers)]
+        self.free_at = [0] * n_workers
+        self.stats = {"placed": 0, "prefilled_tokens": 0}
+
+    def place(self, req: Request, clock: int) -> int:
+        """Queue ``req`` on the least-loaded worker; returns ready time."""
+        w = min(range(self.n_workers),
+                key=lambda i: (len(self.queues[i]), self.free_at[i], i))
+        n_tok = len(req.resume_prompt())
+        dur = -(-n_tok // self.span_len) * self.chunk  # ceil spans * chunk
+        start = max(clock, self.free_at[w])
+        ready = start + dur
+        self.free_at[w] = ready
+        self.queues[w].append((ready, req))
+        req.state = "prefilling"
+        self.stats["placed"] += 1
+        self.stats["prefilled_tokens"] += n_tok
+        return ready
+
+    def pop_ready(self, clock: int) -> List[Request]:
+        """Prompts whose prefill completed by ``clock`` (FIFO per worker)."""
+        out: List[Request] = []
+        for q in self.queues:
+            while q and q[0][0] <= clock:
+                _, req = q.pop(0)
+                req.prefill_done = True
+                req.state = "waiting"
+                out.append(req)
+        return out
+
+    def pending(self) -> bool:
+        return any(self.queues)
+
+    def depths(self) -> List[int]:
+        return [len(q) for q in self.queues]

@@ -215,6 +215,26 @@ def logical_constraint(x: jax.Array, logical_axes: LogicalAxes, mesh: Mesh,
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
 
 
+def summarize_dropped(dropped: Sequence[Tuple[str, int]],
+                      mesh: Mesh, rules: AxisRules) -> List[str]:
+    """Dedupe and render the ``dropped`` list that resolve_spec appends to
+    into human-readable fallback lines, e.g.
+    ``kv_heads=2 not divisible by mesh axes ('model',)=4 -> replicated``.
+
+    Serve engines report these once at construction so GQA KV replication
+    (and any other silent divisibility fallback) is visible in logs and
+    engine stats instead of being swallowed."""
+    sizes = _mesh_axis_sizes(mesh)
+    lines: List[str] = []
+    for logical, dim in dict.fromkeys(dropped):  # dedupe, keep order
+        axes = tuple(a for a in rules.lookup(logical) if a in sizes)
+        prod = math.prod(sizes[a] for a in axes) if axes else 1
+        lines.append(
+            f"{logical}={dim} not divisible by mesh axes {axes}={prod}"
+            " -> replicated")
+    return lines
+
+
 def tree_shardings(tree_logical, tree_shapes, mesh: Mesh, rules: AxisRules,
                    dropped: Optional[List[Tuple[str, int]]] = None):
     """Map a pytree of logical-axes tuples + matching pytree of shapes to a

@@ -7,7 +7,8 @@ Five sections:
   1. static batch — chunked loop vs per-token loop (PR 1's win: one
      compiled program per chunk, one host sync per chunk);
   2. arrival trace — continuous batching under a synthetic multi-user
-     trace (occupancy / preemptions);
+     trace (occupancy / preemptions, TTFT/TPOT percentiles and the
+     prefill-vs-decode time split from the telemetry registry);
   3. shared-prefix batch — requests sharing a long prompt prefix served
      cold (PR 1 engine) vs with prefix caching + draft-k speculation.
      Reports prefix-cache hit rate, speculative acceptance length,
@@ -345,6 +346,28 @@ def run_sections(emit, *, arch="qwen2_0_5b", batch=4, prompt_len=16,
          " ".join(f"{k}={v}" for k, v in s.stats.items()))
     log(f"trace ({trace} reqs): {toks} tokens in {wall:.2f}s "
         f"({toks / wall:.1f} tok/s)  occupancy={s.mean_occupancy:.2f}")
+    # SLO percentiles on the arrivals workload, straight off the
+    # engine's telemetry registry (TTFT is measured at chunk drain, so
+    # its floor is one chunk of decode on this host)
+    slo = engine.slo_summary()
+    emit("serve/ttft_p50_s", slo["ttft_p50_s"], "measured at chunk drain")
+    emit("serve/ttft_p95_s", slo["ttft_p95_s"], "")
+    emit("serve/tpot_p50_s", slo["tpot_p50_s"], "")
+    emit("serve/tpot_p95_s", slo["tpot_p95_s"], "")
+    emit("serve/queue_wait_p50_steps", slo["queue_wait_p50_steps"], "")
+    emit("serve/prefill_time_s", slo["prefill_time_s"],
+         f"{slo['prefill_tok_s']:.0f} tok/s")
+    emit("serve/decode_time_s", slo["decode_time_s"],
+         f"{slo['decode_tok_s']:.0f} tok/s")
+    log(f"slo: ttft p50={slo['ttft_p50_s'] * 1e3:.1f}ms "
+        f"p95={slo['ttft_p95_s'] * 1e3:.1f}ms | "
+        f"tpot p50={slo['tpot_p50_s'] * 1e3:.2f}ms "
+        f"p95={slo['tpot_p95_s'] * 1e3:.2f}ms | "
+        f"queue p50={slo['queue_wait_p50_steps']:.0f} steps | "
+        f"prefill {slo['prefill_time_s']:.2f}s / "
+        f"decode {slo['decode_time_s']:.2f}s")
+    global _LAST_SNAPSHOT
+    _LAST_SNAPSHOT = engine.metrics.snapshot()
 
     if not engine.paged:
         return
@@ -396,6 +419,17 @@ def run_sections(emit, *, arch="qwen2_0_5b", batch=4, prompt_len=16,
 
     # 5. sharded serving (subprocess: needs a multi-device mesh) ----------
     bench_sharded(emit, log)
+
+
+# last arrivals-workload registry snapshot, exported to run.py --json
+# under the BENCH_serve.json "metrics" key (see metrics_snapshot())
+_LAST_SNAPSHOT: dict = {}
+
+
+def metrics_snapshot() -> dict:
+    """run.py --json hook: the arrivals-workload engine's final
+    telemetry-registry snapshot (counters + SLO histograms)."""
+    return _LAST_SNAPSHOT
 
 
 def run(emit):
@@ -512,7 +546,9 @@ def main() -> None:
                  seed=args.seed, log=print)
     if args.json:
         with open("BENCH_serve.json", "w") as f:
-            json.dump(rows, f, indent=1)
+            json.dump({"suite": "serve", "rows": rows,
+                       "metrics": metrics_snapshot()}, f, indent=1,
+                      default=str)
         print("wrote BENCH_serve.json")
     if failed:
         print(f"WARNING: gates failed: {failed}")

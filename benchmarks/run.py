@@ -3,7 +3,10 @@
 Prints ``name,value,note`` CSV; ``--json`` additionally writes one
 machine-readable ``BENCH_<suite>.json`` per suite run (e.g.
 ``BENCH_serve.json`` / ``BENCH_kernels.json``) so a trajectory can be
-tracked across commits. Usage:
+tracked across commits. Each JSON document is
+``{"suite", "rows", "metrics"}``: the emitted rows plus the suite's
+final telemetry-registry snapshot (``metrics_snapshot()`` hook on the
+suite module; ``{}`` for suites without one). Usage:
   PYTHONPATH=src python -m benchmarks.run [--only table1,serve,...] [--json]
 """
 
@@ -71,9 +74,14 @@ def main() -> None:
         mod.run(emit)
         emit(f"{name}/_suite_seconds", time.time() - t0, "")
         if args.json:
+            # suites expose metrics_snapshot() to embed their final
+            # telemetry-registry state alongside the rows
+            snap_fn = getattr(mod, "metrics_snapshot", None)
             path = f"BENCH_{name}.json"
             with open(path, "w") as f:
-                json.dump(rows, f, indent=1, default=str)
+                json.dump({"suite": name, "rows": rows,
+                           "metrics": snap_fn() if snap_fn else {}},
+                          f, indent=1, default=str)
             print(f"# wrote {path}", flush=True)
     if failures:
         print(f"\n{len(failures)} MISMATCH/FAILED rows: {failures[:10]}",

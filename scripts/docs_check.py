@@ -14,7 +14,10 @@ Verifies that the documentation keeps up with the code:
      module under ``src/``;
   5. every ``--flag`` on a ``python ...`` command line inside a fenced
      code block appears verbatim in the source of the script/module the
-     command invokes (so documented CLI surfaces can't drift).
+     command invokes (so documented CLI surfaces can't drift);
+  6. every backticked ``serve_*`` / ``train_*`` metric name in
+     docs/observability.md exists in ``src/repro/obs/`` (the catalog
+     table can't drift from the pinned metric vocabulary).
 
 Exits non-zero with a report on failure. Wired into scripts/tier1.sh as
 a *fatal* gate: docs drift blocks the tier-1 verify.
@@ -152,6 +155,19 @@ def main() -> int:
     # 5) documented CLI flags exist in the script they are shown with
     for f in docs:
         check_cli_flags(f, problems)
+
+    # 6) metric names in the observability catalog exist in the obs
+    # package (repro.obs.metrics.CATALOG is the pinned vocabulary)
+    obs_doc = ROOT / "docs" / "observability.md"
+    if obs_doc.exists():
+        obs_src = "\n".join(p.read_text() for p in sorted(
+            (ROOT / "src" / "repro" / "obs").glob("*.py")))
+        for m in re.finditer(r"`((?:serve|train)_[a-z0-9_]+)`",
+                             obs_doc.read_text()):
+            if m.group(1) not in obs_src:
+                problems.append(
+                    f"docs/observability.md: metric `{m.group(1)}` not "
+                    f"found in src/repro/obs/")
 
     if problems:
         print("docs-check FAILED:")

@@ -19,3 +19,18 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
 # checkpoint-interval optimum must match the closed-form search
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python benchmarks/bench_fleet.py --smoke
+# trace gate: serve a short arrivals trace with telemetry on, then
+# validate the Chrome trace (balanced spans, non-negative durations),
+# replay the measured steptrace through the fleet simulator, and merge
+# serve + train + fleet events into one validating timeline
+TRACE_TMP="$(mktemp -d)"
+trap 'rm -rf "$TRACE_TMP"' EXIT
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m repro.launch.serve --arch qwen2_0_5b --smoke --trace 6 \
+    --max-batch 2 --chunk 4 \
+    --trace-out "$TRACE_TMP/serve_trace.json" \
+    --metrics-out "$TRACE_TMP/serve_metrics.jsonl" \
+    --steptrace-out "$TRACE_TMP/serve_steptrace.json"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python scripts/trace_gate.py "$TRACE_TMP/serve_trace.json" \
+    "$TRACE_TMP/serve_steptrace.json"

@@ -1,0 +1,106 @@
+#!/usr/bin/env python
+"""Tier-1 trace-validation gate (fatal).
+
+Takes the Chrome trace + steptrace that the tier-1 serve smoke run just
+wrote, then closes the whole telemetry loop in-process:
+
+  1. validate the serve trace (balanced B/E per lane, non-negative
+     durations, ``serve`` spans present);
+  2. run a tiny ResilientTrainer with an enabled tracer so step / ckpt /
+     replay spans land in the same schema;
+  3. feed the *measured* serve steptrace through
+     ``StepTimeModel.from_trace`` and drive a FleetSimulator off it,
+     with the sim recording into the SAME tracer as the trainer;
+  4. merge everything into one timeline and require the ``serve``,
+     ``train`` and ``fleet`` categories to validate together — the
+     ISSUE's "one Chrome trace can contain all three" acceptance.
+
+  PYTHONPATH=src python scripts/trace_gate.py TRACE.json STEPTRACE.json
+
+Exit status is the number of failing stages (0 == gate passes).
+"""
+
+from __future__ import annotations
+
+import json
+import shutil
+import sys
+import tempfile
+
+sys.path.insert(0, "src")
+
+from repro.configs.registry import get_smoke
+from repro.fleet.perf import StepTimeModel, job_spec_from_trace
+from repro.fleet.sim import FleetConfig, FleetSimulator
+from repro.launch.train import build_trainer
+from repro.obs.steptrace import StepTrace
+from repro.obs.trace import (SpanTracer, merge_chrome_traces,
+                             validate_chrome_trace)
+from repro.resilience.driver import StragglerPolicy
+
+
+def check(label: str, problems: list) -> int:
+    if problems:
+        print(f"FAILED [{label}]:")
+        for p in problems:
+            print(f"  - {p}")
+        return 1
+    print(f"ok [{label}]")
+    return 0
+
+
+def main() -> int:
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return 2
+    trace_path, steptrace_path = sys.argv[1], sys.argv[2]
+    failures = 0
+
+    # 1. the serve smoke run's request-lifecycle trace ----------------------
+    with open(trace_path) as f:
+        serve_doc = json.load(f)
+    failures += check("serve trace", validate_chrome_trace(
+        serve_doc, require_cats=["serve"]))
+
+    # 2. tiny real trainer sharing one tracer with the sim ------------------
+    shared = SpanTracer()
+    tmp = tempfile.mkdtemp(prefix="trace_gate_")
+    try:
+        trainer, state = build_trainer(
+            get_smoke("qwen2_0_5b"), batch=2, seq=16, ckpt_dir=tmp,
+            checkpoint_every=4, failures={5: 0}, tracer=shared)
+        trainer.straggler = StragglerPolicy(threshold=float("inf"))
+        trainer.run(state, 8)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    # 3. fleet sim driven by the MEASURED serve steptrace -------------------
+    st = StepTrace.read(steptrace_path)
+    model = StepTimeModel.from_trace(st)
+    spec = job_spec_from_trace("measured", st, chips=64,
+                               total_steps=24, checkpoint_every_steps=8)
+    sim = FleetSimulator(
+        FleetConfig(tpu="ironwood", total_cubes=2, host_mtbf_hours=None),
+        [spec], tracer=shared)
+    sim.run(100.0 * max(model.mean_step_s, 1e-3) * spec.total_steps + 10.0)
+    job = sim.jobs["measured"]
+    failures += check("steptrace-driven sim", [] if job.state == "done"
+                      else [f"sim job state {job.state!r}, wanted 'done' "
+                            f"(model mean {model.mean_step_s:.4f}s over "
+                            f"{len(model.durations)} measured chunks)"])
+    print(f"  measured step model: {model.mean_step_s * 1e3:.1f}ms mean "
+          f"over {len(model.durations)} chunks -> sim goodput "
+          f"{job.ledger.goodput:.4f}")
+
+    # 4. one timeline: serve + train + fleet --------------------------------
+    merged = merge_chrome_traces([serve_doc, shared.chrome_trace()])
+    failures += check("merged serve+train+fleet timeline",
+                      validate_chrome_trace(
+                          merged, require_cats=["serve", "train", "fleet"]))
+
+    print("trace gate:", "FAILED" if failures else "PASSED")
+    return failures
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -15,8 +15,9 @@ from repro.fleet.events import Event, EventEngine
 from repro.fleet.jobs import (JobRuntime, JobSpec,
                               optimal_checkpoint_interval_s,
                               search_checkpoint_interval)
-from repro.fleet.perf import (StepTimeModel, TrainWorkload,
-                              generation_step_times, job_spec_from_roofline,
+from repro.fleet.perf import (MeasuredStepTimeModel, StepTimeModel,
+                              TrainWorkload, generation_step_times,
+                              job_spec_from_roofline, job_spec_from_trace,
                               sim_checkpoint_interval_sweep)
 from repro.fleet.power import PowerModel, generation_efficiency_table, \
     sustainability_ratios
@@ -27,8 +28,9 @@ __all__ = [
     "GRAMMAR_KINDS", "grammar_ok", "run_bridge", "simulate_trainer_plan",
     "Event", "EventEngine", "JobRuntime", "JobSpec",
     "optimal_checkpoint_interval_s", "search_checkpoint_interval",
-    "StepTimeModel", "TrainWorkload", "generation_step_times",
-    "job_spec_from_roofline", "sim_checkpoint_interval_sweep",
+    "MeasuredStepTimeModel", "StepTimeModel", "TrainWorkload",
+    "generation_step_times", "job_spec_from_roofline",
+    "job_spec_from_trace", "sim_checkpoint_interval_sweep",
     "PowerModel", "generation_efficiency_table", "sustainability_ratios",
     "FleetConfig", "FleetSimulator", "TraceRecorder",
 ]

@@ -35,7 +35,7 @@ and checks the sim-optimal interval lands within one grid bucket of the
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core import hwspec
 from repro.core.goodput import modeled_goodput
@@ -43,6 +43,7 @@ from repro.core.roofline import (RooflineReport, build_report,
                                  synthetic_train_cost)
 from repro.core.topology import CUBE
 from repro.fleet.jobs import JobSpec
+from repro.obs.steptrace import EFFECTIVE_KINDS, StepTrace
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,6 +105,81 @@ class StepTimeModel:
 
     def __call__(self, cubes: int) -> float:
         return self.report(cubes).t_bound / self.efficiency
+
+    @staticmethod
+    def from_trace(trace: StepTrace,
+                   kinds: Sequence[str] = EFFECTIVE_KINDS,
+                   cubes_ref: int = 1) -> "MeasuredStepTimeModel":
+        """Build a step-time model from a *measured* ``StepTrace``
+        (real ``ServeEngine`` chunks or ``ResilientTrainer`` steps)
+        instead of the analytic roofline — ROADMAP item 3's seam. The
+        returned model prices a step at ``cubes_ref`` cubes as the
+        measured mean and rescales ideal-linearly elsewhere; its
+        ``replay()`` hands back the recorded per-step durations
+        untouched for trace-replay consumers."""
+        durations = tuple(trace.durations(kinds))
+        if not durations:
+            raise ValueError(
+                f"trace from {trace.source!r} has no events of kinds "
+                f"{tuple(kinds)} to model")
+        return MeasuredStepTimeModel(
+            durations=durations, cubes_ref=cubes_ref,
+            source=trace.source)
+
+
+@dataclasses.dataclass(frozen=True)
+class MeasuredStepTimeModel:
+    """Callable slice-size -> seconds per step, backed by measured
+    durations: the mean of the recorded trace at ``cubes_ref`` cubes,
+    ideal-linear rescale at other sizes (measurement fixes the anchor;
+    the scaling curve stays the simulator's assumption)."""
+
+    durations: Tuple[float, ...]
+    cubes_ref: int = 1
+    source: str = ""
+
+    def __post_init__(self) -> None:
+        if not self.durations:
+            raise ValueError("need at least one measured duration")
+        if self.cubes_ref <= 0:
+            raise ValueError("cubes_ref must be positive")
+
+    @property
+    def mean_step_s(self) -> float:
+        return sum(self.durations) / len(self.durations)
+
+    def __call__(self, cubes: int) -> float:
+        if cubes <= 0:
+            raise ValueError("cubes must be positive")
+        return self.mean_step_s * self.cubes_ref / cubes
+
+    def replay(self) -> Tuple[float, ...]:
+        """The recorded per-step durations, in execution order."""
+        return self.durations
+
+
+def job_spec_from_trace(
+    name: str,
+    trace: StepTrace,
+    *,
+    chips: int,
+    total_steps: int,
+    checkpoint_every_steps: int = 100,
+    arrival_s: float = 0.0,
+    scale_policy: str = "queue",
+    min_cubes: int = 0,
+    kinds: Sequence[str] = EFFECTIVE_KINDS,
+) -> JobSpec:
+    """A ``JobSpec`` whose step time comes from a measured trace: the
+    fleet sim runs on what the engine/trainer actually clocked."""
+    cubes = max(1, CUBE.cubes_for(chips))
+    model = StepTimeModel.from_trace(trace, kinds=kinds, cubes_ref=cubes)
+    return JobSpec(
+        name=name, chips=chips, total_steps=total_steps,
+        step_time_s=model(cubes),
+        checkpoint_every_steps=checkpoint_every_steps,
+        arrival_s=arrival_s, scale_policy=scale_policy,
+        min_cubes=min_cubes, step_time_model=model)
 
 
 def generation_step_times(workload: TrainWorkload, cubes: int,

@@ -95,7 +95,8 @@ class FleetConfig:
 
 
 class FleetSimulator:
-    def __init__(self, cfg: FleetConfig, jobs: Sequence[JobSpec]):
+    def __init__(self, cfg: FleetConfig, jobs: Sequence[JobSpec],
+                 *, tracer=None):
         names = [j.name for j in jobs]
         if len(set(names)) != len(names):
             raise ValueError("duplicate job names")
@@ -104,7 +105,9 @@ class FleetSimulator:
         self.engine = EventEngine(cfg.seed)
         self.sched = OCSPodScheduler(cfg.total_cubes,
                                      contiguous=cfg.contiguous)
-        self.trace = TraceRecorder()
+        # pass a shared obs.trace.SpanTracer to land sim events in the
+        # same timeline as serve/train spans (scripts/trace_gate.py)
+        self.trace = TraceRecorder(tracer=tracer)
         self.jobs: Dict[str, JobRuntime] = {
             j.name: JobRuntime(spec=j) for j in jobs}
         self.stats = {"cube_failures": 0, "repairs": 0, "starvations": 0,

@@ -1,89 +1,16 @@
-"""Chrome-trace export of fleet simulations.
+"""Chrome-trace export of fleet simulations — thin re-export.
 
-Emits the Trace Event Format JSON that chrome://tracing / Perfetto load
-directly: one process row per job (complete "X" events for train / rework
-/ restore / queued / ckpt-write phases, in microseconds) plus a pod-level
-row of instant "i" events for failures, repairs, SDC detections, OCS
-reconfigurations, elastic re-scales, and install waves, and pod counters
-(spare cubes, installed cubes, concurrent checkpoint writers). The same
-idea as trace-driven replay tooling (byteprofile-style timelines),
-pointed at fleet state instead of ops.
+The recorder now lives in ``repro.obs.trace`` as a shim over the shared
+``SpanTracer``, so fleet-sim events, serve-engine request spans, and
+trainer step/replay spans serialize through one schema and can merge
+into one timeline. This module keeps the historical import path
+(``repro.fleet.trace.TraceRecorder``) and constants alive.
 """
 
 from __future__ import annotations
 
-import json
-from typing import Any, Dict, List, Optional
+from repro.obs.trace import (_COLORS, _PHASE_TID, _POD_PID, SpanTracer,
+                             TraceRecorder)
 
-_POD_PID = 0  # process row for pod-level instants
-_PHASE_TID = 1
-
-_COLORS = {
-    "train": "good",
-    "rework": "bad",
-    "restore": "terrible",
-    "detect": "yellow",
-    "queued": "grey",
-    "ckpt": "olive",
-}
-
-
-class TraceRecorder:
-    def __init__(self) -> None:
-        self.events: List[Dict[str, Any]] = []
-        self._job_pid: Dict[str, int] = {}
-
-    def _pid(self, job: str) -> int:
-        if job not in self._job_pid:
-            pid = len(self._job_pid) + 1
-            self._job_pid[job] = pid
-            self.events.append({
-                "ph": "M", "pid": pid, "name": "process_name",
-                "args": {"name": f"job:{job}"},
-            })
-        return self._job_pid[job]
-
-    def duration(self, job: str, phase: str, t0_s: float, dur_s: float,
-                 args: Optional[Dict[str, Any]] = None) -> None:
-        """A complete event on the job's row; zero-length phases (async
-        checkpoint marks) become instants so they stay visible."""
-        ev: Dict[str, Any] = {
-            "pid": self._pid(job), "tid": _PHASE_TID, "name": phase,
-            "ts": t0_s * 1e6, "cat": "fleet",
-        }
-        if _COLORS.get(phase):
-            ev["cname"] = _COLORS[phase]
-        if args:
-            ev["args"] = args
-        if dur_s <= 0.0:
-            ev.update(ph="i", s="t")
-        else:
-            ev.update(ph="X", dur=dur_s * 1e6)
-        self.events.append(ev)
-
-    def instant(self, name: str, t_s: float,
-                args: Optional[Dict[str, Any]] = None) -> None:
-        self.events.append({
-            "ph": "i", "s": "g", "pid": _POD_PID, "tid": 0, "name": name,
-            "ts": t_s * 1e6, "cat": "pod",
-            **({"args": args} if args else {}),
-        })
-
-    def counter(self, name: str, t_s: float,
-                values: Dict[str, float]) -> None:
-        self.events.append({
-            "ph": "C", "pid": _POD_PID, "tid": 0, "name": name,
-            "ts": t_s * 1e6, "args": dict(values),
-        })
-
-    # -- export --------------------------------------------------------------
-
-    def chrome_trace(self) -> Dict[str, Any]:
-        meta = [{"ph": "M", "pid": _POD_PID, "name": "process_name",
-                 "args": {"name": "pod"}}]
-        return {"traceEvents": meta + self.events,
-                "displayTimeUnit": "ms"}
-
-    def write(self, path: str) -> None:
-        with open(path, "w") as f:
-            json.dump(self.chrome_trace(), f)
+__all__ = ["TraceRecorder", "SpanTracer",
+           "_COLORS", "_PHASE_TID", "_POD_PID"]

@@ -58,6 +58,7 @@ from repro.configs.registry import get_arch, get_smoke
 from repro.models import api
 from repro.models.blocks import ModelContext
 from repro.models.params import init_params
+from repro.obs.trace import SpanTracer
 from repro.serve.engine import ServeEngine, quantize_weights
 from repro.serve.scheduler import Request
 
@@ -78,6 +79,36 @@ def make_trace(n: int, vocab: int, seed: int, *, prompt_lo=8, prompt_hi=32,
             max_new=int(rng.integers(new_lo, new_hi + 1)),
             arrival=t))
     return reqs
+
+
+def slo_line(engine) -> str:
+    """One-line TTFT/TPOT/role-split summary from the metrics registry."""
+    s = engine.slo_summary()
+    return (f"slo: requests={s['requests']:.0f} "
+            f"ttft p50={s['ttft_p50_s'] * 1e3:.1f}ms "
+            f"p95={s['ttft_p95_s'] * 1e3:.1f}ms | "
+            f"tpot p50={s['tpot_p50_s'] * 1e3:.2f}ms "
+            f"p95={s['tpot_p95_s'] * 1e3:.2f}ms | "
+            f"queue p50={s['queue_wait_p50_steps']:.0f} steps | "
+            f"prefill {s['prefill_time_s']:.2f}s "
+            f"({s['prefill_tok_s']:.0f} tok/s) / "
+            f"decode {s['decode_time_s']:.2f}s "
+            f"({s['decode_tok_s']:.0f} tok/s)")
+
+
+def dump_telemetry(engine, args) -> None:
+    """--metrics-out / --trace-out / --steptrace-out epilogue."""
+    if args.metrics_out:
+        engine.metrics.to_jsonl(args.metrics_out)
+        print(f"metrics snapshot appended to {args.metrics_out}")
+    if args.trace_out:
+        engine.tracer.write(args.trace_out)
+        print(f"chrome trace written to {args.trace_out} "
+              f"({len(engine.tracer.events)} events)")
+    if args.steptrace_out:
+        engine.steptrace.write(args.steptrace_out)
+        print(f"steptrace written to {args.steptrace_out} "
+              f"({len(engine.steptrace)} events)")
 
 
 def main() -> None:
@@ -115,6 +146,13 @@ def main() -> None:
     ap.add_argument("--prefill-workers", type=int, default=1)
     ap.add_argument("--link", choices=["ici", "dcn"], default="ici",
                     help="modeled prefill->decode page-transfer link")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="append a timestamped JSONL metrics snapshot")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the request-lifecycle Chrome trace")
+    ap.add_argument("--steptrace-out", default=None, metavar="PATH",
+                    help="write the measured step-time trace (replayable "
+                         "via fleet.perf.StepTimeModel.from_trace)")
     args = ap.parse_args()
 
     mesh = None
@@ -138,6 +176,7 @@ def main() -> None:
 
     window = args.prompt_len + args.max_new
     paged = api.supports_paged_decode(cfg)
+    tracer = SpanTracer() if args.trace_out else None
     engine = ServeEngine(cfg, ctx, window=window, max_batch=args.max_batch,
                          chunk=args.chunk, page_size=args.page_size,
                          temperature=args.temperature,
@@ -147,7 +186,7 @@ def main() -> None:
                          mesh=mesh, rules=args.rules,
                          disaggregate=args.disaggregate,
                          prefill_workers=args.prefill_workers,
-                         transfer_link=args.link)
+                         transfer_link=args.link, tracer=tracer)
     mode = "paged" if engine.paged else "dense"
     if mesh is not None:
         mode += "/sharded"
@@ -174,8 +213,8 @@ def main() -> None:
         s = engine.scheduler
         print(f"[{mode}] {args.trace} requests, {toks} tokens in "
               f"{wall:.2f}s ({toks / wall:.1f} tok/s)")
-        print(f"occupancy={s.mean_occupancy:.2f} stats={s.stats} "
-              f"counters={engine.counters}")
+        print(f"occupancy={s.mean_occupancy:.2f} stats={s.stats}")
+        print(slo_line(engine))
         if engine.paged:
             print(f"prefix_hit_rate={engine.prefix_hit_rate:.2f} "
                   f"acceptance_length={engine.acceptance_length:.2f} "
@@ -197,6 +236,7 @@ def main() -> None:
         if mesh is not None and engine.sharding_report["dropped_rules"]:
             print("sharding fallbacks:",
                   "; ".join(engine.sharding_report["dropped_rules"]))
+        dump_telemetry(engine, args)
         return
 
     batch = {"tokens": jnp.asarray(
@@ -216,7 +256,9 @@ def main() -> None:
     print(f"[{mode}] generated {toks} tokens in {wall:.2f}s "
           f"({toks / wall:.1f} tok/s batch={args.batch}) "
           f"host_syncs={engine.counters['host_syncs']}")
+    print(slo_line(engine))
     print("sample:", np.asarray(out[0])[:16])
+    dump_telemetry(engine, args)
 
 
 if __name__ == "__main__":

@@ -20,12 +20,12 @@ import jax.numpy as jnp
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs.registry import get_arch, get_smoke
 from repro.core.cci import CCI_BY_NAME, CarbonLedger
-from repro.core.goodput import GoodputLedger
 from repro.core.ocs import OCSPodScheduler
 from repro.data.pipeline import DataConfig, DataPipeline
 from repro.launch.cells import make_optimizer
 from repro.models.blocks import ModelContext
 from repro.models.config import ModelConfig
+from repro.obs.trace import SpanTracer
 from repro.resilience.driver import FailurePlan, ResilientTrainer
 from repro.train.step import TrainSettings, init_train_state, \
     make_train_step
@@ -36,7 +36,8 @@ def build_trainer(cfg: ModelConfig, *, batch: int, seq: int,
                   checkpoint_every: int = 20, seed: int = 0,
                   optimizer: str = "adamw",
                   failures: Optional[Dict[int, int]] = None,
-                  compute_dtype=jnp.float32):
+                  compute_dtype=jnp.float32,
+                  metrics=None, tracer=None):
     ctx = ModelContext(compute_dtype=compute_dtype, q_chunk=2048,
                        mamba_chunk=64, rwkv_chunk=16)
     opt = make_optimizer(optimizer, total_steps=10_000)
@@ -52,7 +53,8 @@ def build_trainer(cfg: ModelConfig, *, batch: int, seq: int,
     trainer = ResilientTrainer(
         train_step=step_fn, pipeline=pipeline, ckpt=ckpt, scheduler=sched,
         job="train", checkpoint_every=checkpoint_every,
-        failure_plan=FailurePlan(failures=dict(failures or {})))
+        failure_plan=FailurePlan(failures=dict(failures or {})),
+        metrics=metrics, tracer=tracer)
     state = init_train_state(jax.random.key(seed), cfg, opt)
     # restore-if-present (restart semantics)
     latest = ckpt.latest_step()
@@ -75,14 +77,22 @@ def main() -> None:
     ap.add_argument("--fail-at", type=int, default=None,
                     help="inject a cube failure at this step")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="append a timestamped JSONL metrics snapshot")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the step/ckpt/replay Chrome trace")
+    ap.add_argument("--steptrace-out", default=None, metavar="PATH",
+                    help="write the measured step-time trace (replayable "
+                         "via fleet.perf.StepTimeModel.from_trace)")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_arch(args.arch)
     failures = {args.fail_at: 0} if args.fail_at is not None else None
+    tracer = SpanTracer() if args.trace_out else None
     trainer, state = build_trainer(
         cfg, batch=args.batch, seq=args.seq, ckpt_dir=args.ckpt_dir,
         microbatches=args.microbatches, checkpoint_every=args.ckpt_every,
-        seed=args.seed, failures=failures)
+        seed=args.seed, failures=failures, tracer=tracer)
 
     carbon = CarbonLedger(CCI_BY_NAME["ironwood"])
     t0 = time.time()
@@ -92,15 +102,28 @@ def main() -> None:
     carbon.record_step(flops_per_step * len(losses))
     print(f"\ntrained {len(losses)} effective steps in {wall:.1f}s; "
           f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    # one-line goodput/step-time summary from the telemetry registry
+    # (rescales is constitutionally 0 here: the trainer restores at full
+    # scale — the shrink arm lives in repro.fleet)
     rs = trainer.replay_summary()
-    # same key set as the fleet simulator's elastic ledger: rescales is
-    # always 0 here (the trainer restores at full scale; the shrink arm
-    # lives in repro.fleet) — surfaced so the two outputs read alike
-    print("goodput:", {**{k: round(v, 4)
-                          for k, v in ledger.summary().items()},
-                       "rescales": rs["rescales"]})
-    print("replay:", rs)
+    hist = trainer.metrics.histogram("train_step_s")
+    print(f"telemetry: goodput={ledger.goodput:.4f} "
+          f"steps={rs['effective_steps']} "
+          f"replayed={rs['replayed_steps']} rescales={rs['rescales']} "
+          f"ckpts={trainer.metrics.counter('train_ckpt_saves').value:.0f} "
+          f"| step p50={hist.quantile(0.5) * 1e3:.0f}ms "
+          f"p95={hist.quantile(0.95) * 1e3:.0f}ms")
     print("carbon:", {k: f"{v:.3e}" for k, v in carbon.summary().items()})
+    if args.metrics_out:
+        trainer.metrics.to_jsonl(args.metrics_out)
+        print(f"metrics snapshot appended to {args.metrics_out}")
+    if args.trace_out:
+        trainer.tracer.write(args.trace_out)
+        print(f"chrome trace written to {args.trace_out} "
+              f"({len(trainer.tracer.events)} events)")
+    if args.steptrace_out:
+        trainer.steptrace().write(args.steptrace_out)
+        print(f"steptrace written to {args.steptrace_out}")
 
 
 if __name__ == "__main__":

@@ -29,6 +29,9 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.core.goodput import GoodputLedger
 from repro.core.ocs import OCSPodScheduler
 from repro.data.pipeline import DataPipeline
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.steptrace import StepTrace
+from repro.obs.trace import SpanTracer
 
 PyTree = Any
 
@@ -96,6 +99,28 @@ class ResilientTrainer:
     failure_plan: FailurePlan = dataclasses.field(default_factory=FailurePlan)
     straggler: StragglerPolicy = dataclasses.field(
         default_factory=StragglerPolicy)
+    metrics: Optional[MetricsRegistry] = None  # None -> fresh enabled one
+    tracer: Optional[SpanTracer] = None  # None -> disabled
+
+    def __post_init__(self) -> None:
+        # Telemetry is host-side: counters/spans around the (unchanged)
+        # train_step calls, same phase names as the fleet sim's trace
+        # ("train"/"rework"/"restore"/"detect"/"ckpt") so both render
+        # alike in one timeline.
+        if self.metrics is None:
+            self.metrics = MetricsRegistry()
+        if self.tracer is None:
+            self.tracer = SpanTracer(enabled=False)
+        m = self.metrics
+        self._m = {
+            "steps": m.counter("train_steps"),
+            "replayed": m.counter("train_replayed_steps"),
+            "ckpts": m.counter("train_ckpt_saves"),
+            "failures": m.counter("train_failures"),
+            "restores": m.counter("train_restores"),
+            "step_hist": m.histogram("train_step_s"),
+        }
+        self._trace_pid = self.tracer.process("train")
 
     def run(self, state: PyTree, num_steps: int,
             ledger: Optional[GoodputLedger] = None
@@ -112,15 +137,26 @@ class ResilientTrainer:
             # restore — write the starting state synchronously.
             t0 = time.monotonic()
             self.ckpt.save(step, state, blocking=True)
-            ledger.record_idle(time.monotonic() - t0,
-                               note="bootstrap ckpt")
+            dt = time.monotonic() - t0
+            ledger.record_idle(dt, note="bootstrap ckpt")
+            self._m["ckpts"].inc()
+            self.tracer.complete("ckpt", dt, pid=self._trace_pid,
+                                 tid=0, cat="train",
+                                 args={"step": step, "bootstrap": True})
             last_ckpt_step = step
         while step < num_steps:
             cube = self.failure_plan.failure_at(step)
             if cube is not None:
                 # ---- failure path: detect -> map out -> restore -> replay
+                self._m["failures"].inc()
+                self.tracer.instant("cube_fail", pid=self._trace_pid,
+                                    tid=0, cat="train",
+                                    args={"cube": cube, "step": step})
                 ledger.record_detection(self.failure_plan.detect_s,
                                         note=f"cube {cube} died")
+                self.tracer.complete("detect", self.failure_plan.detect_s,
+                                     pid=self._trace_pid, tid=0,
+                                     cat="train", args={"cube": cube})
                 impacted = self.scheduler.fail_cube(cube)
                 patched = self.scheduler.substitute(self.job) \
                     if impacted == self.job else None
@@ -137,17 +173,30 @@ class ResilientTrainer:
                 assert restore_step is not None  # bootstrap guarantees one
                 state = self.ckpt.restore(restore_step, state)
                 last_ckpt_step = restore_step
-                ledger.record_restore(
-                    time.monotonic() - t0 + self.failure_plan.restore_extra_s)
+                restore_dt = (time.monotonic() - t0
+                              + self.failure_plan.restore_extra_s)
+                ledger.record_restore(restore_dt)
+                self._m["restores"].inc()
+                self.tracer.complete("restore", restore_dt,
+                                     pid=self._trace_pid, tid=0,
+                                     cat="train",
+                                     args={"from_step": restore_step})
                 # rework: re-run steps since the checkpoint
                 t0 = time.monotonic()
                 for replay in range(restore_step, step):
                     batch = self.pipeline.batch_for_step(replay)
+                    t1 = time.monotonic()
                     state, metrics = self.train_step(state, batch)
+                    loss_r = float(jax.device_get(metrics["loss"]))
+                    dt_r = time.monotonic() - t1
+                    self._m["replayed"].inc()
+                    self.tracer.complete("replay", dt_r,
+                                         pid=self._trace_pid, tid=0,
+                                         cat="train",
+                                         args={"step": replay})
                     self.records.append(StepRecord(
-                        step=replay,
-                        loss=float(jax.device_get(metrics["loss"])),
-                        replayed=True))
+                        step=replay, loss=loss_r, replayed=True,
+                        duration_s=dt_r))
                 ledger.record_rework(time.monotonic() - t0,
                                      steps=step - restore_step)
                 # the failure is handled; do not re-trigger
@@ -161,6 +210,10 @@ class ResilientTrainer:
             dt = time.monotonic() - t0
             ledger.record_steps(dt, steps=1)
             losses.append(loss)
+            self._m["steps"].inc()
+            self._m["step_hist"].observe(dt)
+            self.tracer.complete("step", dt, pid=self._trace_pid, tid=0,
+                                 cat="train", args={"step": step})
             self.records.append(StepRecord(step=step, loss=loss,
                                            duration_s=dt))
             if self.straggler.observe(dt):
@@ -170,8 +223,12 @@ class ResilientTrainer:
                 state = jax.block_until_ready(state)
                 t0 = time.monotonic()
                 self.ckpt.save(step, state)  # async
-                ledger.record_idle(time.monotonic() - t0,
-                                   note="ckpt snapshot")
+                dt = time.monotonic() - t0
+                ledger.record_idle(dt, note="ckpt snapshot")
+                self._m["ckpts"].inc()
+                self.tracer.complete("ckpt", dt, pid=self._trace_pid,
+                                     tid=0, cat="train",
+                                     args={"step": step})
                 last_ckpt_step = step
         self.ckpt.wait()
         return state, ledger, losses
@@ -194,3 +251,15 @@ class ResilientTrainer:
             "effective_steps": len(recs) - replayed,
             "rescales": 0,
         }
+
+    def steptrace(self) -> StepTrace:
+        """The run's measured step-time trace: one "step" event per
+        effective execution, one "replay" per rework execution, with
+        wall durations — the artifact
+        ``fleet.perf.StepTimeModel.from_trace`` replays through the
+        simulator."""
+        tr = StepTrace(source="train", meta={"job": self.job})
+        for r in getattr(self, "records", []):
+            tr.record("replay" if r.replayed else "step",
+                      r.duration_s, step=r.step)
+        return tr

@@ -64,6 +64,10 @@ from repro.models import api
 from repro.models.blocks import ModelContext
 from repro.models.config import ModelConfig
 from repro.models.params import axes_tree
+from repro.obs.metrics import (CounterDict, MetricsRegistry,
+                               QUEUE_WAIT_BUCKETS_STEPS)
+from repro.obs.steptrace import StepTrace
+from repro.obs.trace import SpanTracer
 from repro.serve.kv_cache import DenseKVCache, PagedKVCache
 from repro.serve.scheduler import (ContinuousBatchingScheduler,
                                    PrefillWorkerPool, Request)
@@ -169,6 +173,8 @@ class ServeEngine:
     prefill_workers: int = 1
     transfer_link: str = "ici"  # "ici" | "dcn"
     transfer_hw: str = "tpu_v5e"  # hwspec generation for the transfer
+    metrics: Any = None  # obs.MetricsRegistry (None -> fresh enabled one)
+    tracer: Any = None  # obs.SpanTracer (None -> disabled)
 
     def __post_init__(self) -> None:
         cfg, ctx = self.cfg, self.ctx
@@ -199,14 +205,50 @@ class ServeEngine:
         self._dropped_raw: List[Tuple[str, int]] = []
         if self.mesh is not None:
             self.ctx = ctx = self._mesh_context(ctx)
-        self.counters = {"prefills": 0, "chunks": 0, "decode_steps": 0,
-                         "host_syncs": 0, "pertoken_steps": 0,
-                         "pages_trimmed": 0, "suffix_prefills": 0,
-                         "prompt_tokens": 0, "cached_prompt_tokens": 0,
-                         "spec_steps": 0, "spec_tokens": 0,
-                         "prefill_span_calls": 0,
-                         "span_prefill_compiles": 0,
-                         "span_prefill_dense_compiles": 0}
+        # Telemetry is host-side only (never touches a device program),
+        # so an instrumented engine is token-identical to a bare one.
+        # ``counters``/``disagg_stats`` keep their historical dict-style
+        # call sites via CounterDict facades; the registry owns the
+        # numbers under "serve_"-prefixed names (obs.CATALOG).
+        if self.metrics is None:
+            self.metrics = MetricsRegistry()
+        if self.tracer is None:
+            self.tracer = SpanTracer(enabled=False)
+        self.steptrace = StepTrace(
+            source="serve", meta={"arch": self.cfg.name})
+        self.counters = CounterDict(
+            self.metrics,
+            ("prefills", "chunks", "decode_steps", "host_syncs",
+             "pertoken_steps", "pages_trimmed", "suffix_prefills",
+             "prompt_tokens", "cached_prompt_tokens", "spec_steps",
+             "spec_tokens", "prefill_span_calls", "span_prefill_compiles",
+             "span_prefill_dense_compiles"),
+            prefix="serve_")
+        m = self.metrics
+        self._m = {
+            "ttft": m.histogram("serve_ttft_s"),
+            "tpot": m.histogram("serve_tpot_s"),
+            "e2e": m.histogram("serve_e2e_s"),
+            "queue_wait": m.histogram("serve_queue_wait_steps",
+                                      edges=QUEUE_WAIT_BUCKETS_STEPS),
+            "prefill_hist": m.histogram("serve_prefill_s"),
+            "chunk_hist": m.histogram("serve_chunk_s"),
+            "prefill_time": m.counter("serve_prefill_time_s"),
+            "decode_time": m.counter("serve_decode_time_s"),
+            "prefill_tokens": m.counter("serve_prefill_tokens"),
+            "decode_tokens": m.counter("serve_decode_tokens"),
+            "generated_tokens": m.counter("serve_generated_tokens"),
+            "admitted": m.counter("serve_requests_admitted"),
+            "finished": m.counter("serve_requests_finished"),
+            "preempted": m.counter("serve_requests_preempted"),
+        }
+        self._trace_pid = self.tracer.process("serve")
+        # decode chunks run all slots at once: one "device" lane past
+        # the per-slot request lanes (tids 0..max_batch-1)
+        self._device_tid = self.tracer.thread(
+            self._trace_pid, self.max_batch, "device")
+        self._req_obs: Dict[int, Dict[str, float]] = {}
+        self._park_spans: set = set()
         if self.paged:
             # +1 page of table headroom: a finished slot's frozen pos can
             # sit exactly at `window`, whose page index must still resolve
@@ -264,12 +306,13 @@ class ServeEngine:
                 resident_bytes=self.max_batch * self.window
                 * self.kv.per_token_bytes(),
                 hw=self.transfer_hw, link=self.transfer_link)
-        self.disagg_stats = {
-            "transfers": 0, "transfer_pages": 0, "transfer_bytes": 0,
-            "transfer_stall_boundaries": 0, "decode_idle_boundaries": 0,
-            "boundaries": 0, "prefill_depth_sum": 0,
-            "prefill_depth_peak": 0, "decode_depth_sum": 0,
-            "decode_depth_peak": 0}
+        self.disagg_stats = CounterDict(
+            self.metrics,
+            ("transfers", "transfer_pages", "transfer_bytes",
+             "transfer_stall_boundaries", "decode_idle_boundaries",
+             "boundaries", "prefill_depth_sum", "prefill_depth_peak",
+             "decode_depth_sum", "decode_depth_peak"),
+            prefix="serve_")
         self._build_jitted()
         self._reset_carry()
 
@@ -437,7 +480,10 @@ class ServeEngine:
         # compile-count regression probe).
         def prefill_span(params, pages, span, table, pos0, valid, key,
                          temp, mrope=None):
-            self.counters["span_prefill_compiles"] += 1  # trace-time
+            # trace-time: jax runs this Python once per compiled program
+            # variant, so compile_event counts compilations (a cache hit
+            # never re-enters the tracer; a retrace legitimately counts)
+            self.metrics.compile_event("serve_span_prefill")
             state = {"pages": pages, "page_table": table, "pos": pos0}
             # only the chunk's last real token needs logits: the gather
             # happens before the lm head, so the vocab projection is
@@ -458,7 +504,8 @@ class ServeEngine:
         # through chunks untouched by the pad.
         def prefill_span_dense(params, cache, span, pos0, key, temp,
                                mrope=None):
-            self.counters["span_prefill_dense_compiles"] += 1  # trace-time
+            # trace-time compile counter; see prefill_span above
+            self.metrics.compile_event("serve_span_prefill_dense")
             state = dict(cache)
             state["pos"] = pos0
             # right-aligned chunks end on a live token: its logits alone
@@ -801,6 +848,28 @@ class ServeEngine:
         steps = self.counters["spec_steps"]
         return (self.counters["spec_tokens"] / steps if steps else 1.0)
 
+    def slo_summary(self) -> Dict[str, float]:
+        """Serving SLO summary straight from the registry: TTFT/TPOT
+        percentiles, queue wait, and the prefill/decode role split
+        (time and tokens/s). All zeros on a disabled registry."""
+        m = self._m
+        pf_t = float(m["prefill_time"].value)
+        dc_t = float(m["decode_time"].value)
+        return {
+            "requests": float(m["finished"].value),
+            "ttft_p50_s": m["ttft"].quantile(0.5),
+            "ttft_p95_s": m["ttft"].quantile(0.95),
+            "tpot_p50_s": m["tpot"].quantile(0.5),
+            "tpot_p95_s": m["tpot"].quantile(0.95),
+            "queue_wait_p50_steps": m["queue_wait"].quantile(0.5),
+            "prefill_time_s": pf_t,
+            "decode_time_s": dc_t,
+            "prefill_tok_s": (float(m["prefill_tokens"].value) / pf_t
+                              if pf_t > 0 else 0.0),
+            "decode_tok_s": (float(m["decode_tokens"].value) / dc_t
+                             if dc_t > 0 else 0.0),
+        }
+
     def run(self, params, requests: Sequence[Request], *,
             key: Optional[Array] = None,
             temperature: Optional[float] = None) -> Dict[int, np.ndarray]:
@@ -819,6 +888,15 @@ class ServeEngine:
         # they never pay for the (1 + draft_k)-query span
         self._use_spec = bool(self.draft_k) and float(temp) <= 0.0
         self._reset_carry()
+        # request-lifecycle observation: wall stamps (ready/admit/first
+        # token) per rid, feeding TTFT/TPOT/e2e histograms and lifecycle
+        # spans. Host-side only; the device programs never see any of it.
+        now = self.tracer.clock
+        mtr = self._m
+        pid = self._trace_pid
+        self._req_obs = {}
+        self._park_spans = set()
+        run_t0 = now()
         pool: Optional[PrefillWorkerPool] = None
         if self.disaggregate:
             pool = PrefillWorkerPool(self.prefill_workers, self.span_len,
@@ -829,6 +907,13 @@ class ServeEngine:
         # max tokens one decode step can emit
         per_step = 1 + self.draft_k if self._use_spec else 1
         while sched.has_work() or (pool is not None and pool.pending()):
+            wall = now()
+            for r in sched.waiting:
+                # "ready": first boundary at which the request is live
+                # (arrived); queue-wait and e2e anchor here
+                if r.arrival <= clock:
+                    self._req_obs.setdefault(r.rid, {}) \
+                        .setdefault("ready", wall)
             if pool is not None:
                 # 0) disaggregation bookkeeping: activate parked slots
                 #    whose modeled page transfer has landed (rewriting the
@@ -841,6 +926,9 @@ class ServeEngine:
                     if clock >= ready:
                         del self._parked[slot]
                         self._done = self._done.at[slot].set(False)
+                        if slot in self._park_spans:
+                            self.tracer.end(pid=pid, tid=slot)
+                            self._park_spans.discard(slot)
                 for r in [r for r in sched.waiting
                           if r.arrival <= clock and not r.prefill_done]:
                     sched.waiting.remove(r)
@@ -885,6 +973,14 @@ class ServeEngine:
                         # a parked victim's in-flight transfer is moot:
                         # its pages are gone; it re-prefills on resume
                         self._parked.pop(vslot, None)
+                        if vslot in self._park_spans:
+                            self.tracer.end(pid=pid, tid=vslot)
+                            self._park_spans.discard(vslot)
+                        self.tracer.end(pid=pid, tid=vslot)  # req span
+                        self.tracer.instant(
+                            "preempt", pid=pid, tid=vslot, cat="serve",
+                            args={"rid": victim.rid})
+                        mtr["preempted"].inc()
                         if vslot == slot:
                             break  # we were the youngest: self-preempted
             # 2) admissions into free slots (never preempt to admit)
@@ -915,8 +1011,32 @@ class ServeEngine:
                     req.cached_prefix_len = cached
                     self.counters["prompt_tokens"] += len(rp)
                     self.counters["cached_prompt_tokens"] += cached
+                wall = now()
+                o = self._req_obs.setdefault(req.rid, {})
+                o.setdefault("ready", wall)
+                resumed = "admit" in o  # re-admission after a preemption
+                o["admit"] = wall
+                mtr["admitted"].inc()
+                mtr["queue_wait"].observe(float(clock - req.arrival))
+                self.tracer.begin(
+                    f"req:{req.rid}", pid=pid, tid=slot, cat="serve",
+                    args={"rid": req.rid, "prompt": len(req.prompt),
+                          "resumed": resumed})
                 sched.admit(req, slot)
                 self._admit_into_slot(params, req, slot, key, temp)
+                dt = now() - wall
+                n_prefill = (len(req.prompt) + len(req.generated)
+                             - req.cached_prefix_len)
+                mtr["prefill_hist"].observe(dt)
+                mtr["prefill_time"].add(dt)
+                mtr["prefill_tokens"].add(n_prefill)
+                self.tracer.complete(
+                    "prefill", dt, pid=pid, tid=slot, cat="serve",
+                    args={"tokens": n_prefill,
+                          "cached": req.cached_prefix_len})
+                self.steptrace.record(
+                    "prefill", dt, tokens=n_prefill,
+                    cached=req.cached_prefix_len, batch=1)
                 if pool is not None:
                     # the prefill ran on the prefill role; its finished
                     # pages now cross the modeled link. Park the slot
@@ -931,6 +1051,10 @@ class ServeEngine:
                     st["transfers"] += 1
                     st["transfer_pages"] += moved
                     st["transfer_bytes"] += moved * self.page_bytes
+                    self.tracer.begin(
+                        "park", pid=pid, tid=slot, cat="serve",
+                        args={"pages": moved, "delay_boundaries": delay})
+                    self._park_spans.add(slot)
             if not sched.running:
                 if sched.next_admittable(clock) is not None:
                     raise RuntimeError(
@@ -957,6 +1081,8 @@ class ServeEngine:
                 continue
             # 3) one device-resident chunk
             sched.record_occupancy(len(sched.running))
+            chunk_t0 = now()
+            live = sum(1 for s in sched.running if s not in self._parked)
             cache = self.kv.pages if self.paged else \
                 {k: v for k, v in self.kv.cache.items() if k != "pos"}
             table = self.kv.table_device() if self.paged else jnp.zeros(
@@ -992,6 +1118,9 @@ class ServeEngine:
             toks_h, done_h, pos_h = jax.device_get(
                 (toks, self._done, self._pos))
             self.counters["host_syncs"] += 1
+            wall_drain = now()
+            chunk_dt = wall_drain - chunk_t0
+            emitted = 0
             for slot in list(sched.running):
                 if slot in self._parked:
                     continue  # frozen in transfer: emitted PADs only
@@ -1008,12 +1137,26 @@ class ServeEngine:
                         if cnt:
                             self.counters["spec_steps"] += 1
                             self.counters["spec_tokens"] += cnt
+                            emitted += cnt
                 else:
                     for t in toks_h[slot]:
                         if t != PAD_TOKEN:
                             req.generated.append(int(t))
+                            emitted += 1
+                o = self._req_obs.get(req.rid, {})
+                if req.generated and "first" not in o:
+                    o["first"] = wall_drain
+                    mtr["ttft"].observe(wall_drain - o.get("ready", run_t0))
                 finished = bool(done_h[slot])
                 if finished:
+                    n = len(req.generated)
+                    if "first" in o and n > 1:
+                        mtr["tpot"].observe(
+                            (wall_drain - o["first"]) / (n - 1))
+                    mtr["e2e"].observe(wall_drain - o.get("ready", run_t0))
+                    mtr["finished"].inc()
+                    mtr["generated_tokens"].add(n)
+                    self.tracer.end(pid=pid, tid=slot)  # req span
                     sched.complete(slot)
                     if self.paged:
                         if (self.prefix_cache
@@ -1030,6 +1173,17 @@ class ServeEngine:
                     # attention; release their pages back to the pool
                     self.counters["pages_trimmed"] += self.kv.trim(
                         slot, int(pos_h[slot]) - self.cfg.sliding_window)
+            # chunk-level telemetry: role time split, measured steptrace
+            # event, and one X span on the shared "device" lane
+            mtr["decode_time"].add(chunk_dt)
+            mtr["chunk_hist"].observe(chunk_dt)
+            mtr["decode_tokens"].add(emitted)
+            self.steptrace.record(
+                "spec_decode" if self._use_spec else "decode", chunk_dt,
+                batch=live, steps=self.chunk, tokens=emitted)
+            self.tracer.complete(
+                "decode_chunk", chunk_dt, pid=pid, tid=self._device_tid,
+                cat="serve", args={"live": live, "tokens": emitted})
         return {r.rid: np.asarray(r.generated, np.int32)
                 for r in sched.finished}
 

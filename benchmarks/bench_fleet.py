@@ -9,6 +9,12 @@ re-scale-vs-queue goodput gap, incremental deployment
 roofline-fed per-generation step times, and checkpoint-write contention
 with the sim-vs-Young/Daly interval validation.
 
+The serve side rides the same suite: every scenario JSON under
+``benchmarks/scenarios/`` (SLO-goodput serve jobs, mixed serve+train
+pods, autoscale-vs-static and burst-violation gates) runs as one
+``fleet/scenario_*`` row with its ``expect`` assertions, and the same
+files run as pytest cases (``tests/test_fleet_serve.py``).
+
 Runs as the ``fleet`` suite of ``benchmarks/run.py`` (``--json`` writes
 ``BENCH_fleet.json``; see docs/benchmarks.md for the row schema), or
 standalone:
@@ -17,22 +23,32 @@ standalone:
 
 ``--smoke`` runs the deterministic short-horizon elastic scenario (same
 seed and failure trace for both arms) asserting the re-scale arm beats
-queue-only on goodput AND steps, plus a reduced checkpoint-interval
-sweep asserting sim-vs-model agreement within one grid bucket.
+queue-only on goodput AND steps, a reduced checkpoint-interval sweep
+asserting sim-vs-model agreement within one grid bucket, and the serve
+gates: autoscaling-beats-static and SLO-violation-under-burst scenario
+suites, a byte-identical determinism double-run, and the steptrace
+calibration round-trip (``serve_calibration_check``).
 """
 
 import argparse
+import json
 import sys
+from pathlib import Path
 
 from repro.core import hwspec
 from repro.core.sdc import SDCRateModel
 from repro.fleet import (FleetConfig, FleetSimulator, JobSpec,
                          PowerModel, StepTimeModel, TrainWorkload,
                          generation_step_times, grammar_ok,
-                         job_spec_from_roofline, run_bridge,
+                         job_spec_from_roofline, load_scenario,
+                         load_scenario_paths, run_bridge, run_scenario,
                          search_checkpoint_interval,
+                         serve_calibration_check,
                          sim_checkpoint_interval_sweep,
                          sustainability_ratios)
+from repro.obs.steptrace import StepTrace
+
+SCENARIO_DIR = Path(__file__).resolve().parent / "scenarios"
 
 _DAY = 86400.0
 _HOUR = 3600.0
@@ -289,6 +305,51 @@ def _emit_ckpt_contention(emit, *, smoke=False):
 
 
 # ---------------------------------------------------------------------------
+# Serve scenario suites: every benchmarks/scenarios/*.json runs as a row.
+# ---------------------------------------------------------------------------
+
+
+def _failed_checks(result):
+    return "; ".join(
+        f"{c['metric']} {c['op']} {c['target']} got {c['value']}"
+        for c in result["checks"] if not c["ok"])
+
+
+def _emit_scenarios(emit):
+    paths = load_scenario_paths(SCENARIO_DIR)
+    if not paths:
+        emit("fleet/scenario_suite", 0.0,
+             f"no scenario files under {SCENARIO_DIR} MISMATCH")
+        return
+    for path in paths:
+        res = run_scenario(load_scenario(path))
+        note = f"{len(res['checks'])} expect checks"
+        if res["baseline_metrics"]:
+            note += " + baseline arm"
+        if not res["ok"]:
+            note += f" MISMATCH: {_failed_checks(res)}"
+        emit(f"fleet/scenario_{res['name']}", float(res["ok"]), note)
+        for metric, value in sorted(res["metrics"].items()):
+            job_metric = metric.split("/")[-1]
+            if metric.startswith("serve/") and job_metric in (
+                    "slo_goodput", "joules_per_token"):
+                emit(f"fleet/scenario_{res['name']}:{metric}", value,
+                     f"seeded arrivals, {res['metrics'].get('fleet/serve_finished', 0):.0f} requests served fleet-wide")
+
+
+def _synthetic_serve_trace():
+    """A measured-shape serve steptrace with a known affine batch law
+    (base 20 ms + 2 ms/slot, 8-step chunks, 0.1 ms/prefill-token)."""
+    tr = StepTrace(source="serve", meta={"synthetic": True})
+    for rep in range(6):
+        tr.record("prefill", 0.0128, tokens=128, cached=0, batch=1)
+        for b in (1, 2, 3, 4):
+            tr.record("decode", 0.020 + 0.002 * (b - 1),
+                      batch=b, steps=8, tokens=b * 8, queue_depth=rep)
+    return tr
+
+
+# ---------------------------------------------------------------------------
 # Suite entry (benchmarks/run.py) and the tier-1 smoke gate.
 # ---------------------------------------------------------------------------
 
@@ -386,6 +447,17 @@ def run(emit) -> None:
     _emit_roofline_steps(emit)
     _emit_ckpt_contention(emit)
 
+    # -- serve scenario suites + trace calibration ------------------------
+    _emit_scenarios(emit)
+    cal = serve_calibration_check(_synthetic_serve_trace())
+    note = (f"sim {cal['sim_chunk_s'] * 1e3:.2f} ms vs measured "
+            f"{cal['measured_chunk_s'] * 1e3:.2f} ms per chunk at batch "
+            f"{cal['target_batch']:.0f} ({cal['steady_admissions']:.0f} "
+            f"steady admissions)")
+    if cal["ok"] != 1.0:
+        note += " MISMATCH"
+    emit("fleet/serve_calibration_rel_err", cal["rel_err"], note)
+
     # -- bridge: simulated ledger == measured ledger, event-for-event -----
     out = run_bridge(steps=18, checkpoint_every=6, failures={9: 0, 14: 1})
     note = (f"real goodput {out['real_goodput']:.3f}, "
@@ -398,9 +470,13 @@ def run(emit) -> None:
 def run_smoke() -> int:
     """Tier-1 fleet gate (seconds, deterministic, no jax): the re-scale
     arm must beat queue-only on goodput AND steps under the identical
-    failure trace, stay inside the pinned ledger grammar, and the
+    failure trace, stay inside the pinned ledger grammar, the
     sim-optimal checkpoint interval must agree with the closed-form
-    search within one grid bucket."""
+    search within one grid bucket — and the serve side must hold its
+    gates: the autoscale-vs-static and burst-violation scenario suites
+    pass their ``expect`` checks, a double-run of the mixed scenario is
+    byte-identical (seeded open-loop arrivals), and the trace
+    calibration round-trip recovers the synthetic service law."""
     failures = []
 
     def check(name, ok, detail):
@@ -427,6 +503,25 @@ def run_smoke() -> int:
           f"sim {sweep['sim_best_interval_s']:.0f} s vs model "
           f"{sweep['model_best_interval_s']:.0f} s "
           f"(bucket delta {sweep['bucket_delta']})")
+
+    # -- serve gates ------------------------------------------------------
+    for fname in ("serve_autoscale_vs_static.json",
+                  "serve_burst_slo_violation.json"):
+        res = run_scenario(load_scenario(SCENARIO_DIR / fname))
+        detail = f"{len(res['checks'])} expect checks pass"
+        if not res["ok"]:
+            detail = _failed_checks(res)
+        check(f"serve-{res['name']}", res["ok"], detail)
+    doc = load_scenario(SCENARIO_DIR / "serve_burst_slo_violation.json")
+    runs = [json.dumps(run_scenario(doc)["metrics"], sort_keys=True)
+            for _ in range(2)]
+    check("serve-determinism", runs[0] == runs[1],
+          f"double-run metrics byte-identical ({len(runs[0])} bytes)")
+    cal = serve_calibration_check(_synthetic_serve_trace())
+    check("serve-calibration", cal["ok"] == 1.0,
+          f"rel_err {cal['rel_err']:.2e} over "
+          f"{cal['steady_admissions']:.0f} steady admissions at batch "
+          f"{cal['target_batch']:.0f}")
     print("bench_fleet --smoke:", "FAILED" if failures else "PASSED")
     return 1 if failures else 0
 

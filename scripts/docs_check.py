@@ -17,7 +17,11 @@ Verifies that the documentation keeps up with the code:
      command invokes (so documented CLI surfaces can't drift);
   6. every backticked ``serve_*`` / ``train_*`` metric name in
      docs/observability.md exists in ``src/repro/obs/`` (the catalog
-     table can't drift from the pinned metric vocabulary).
+     table can't drift from the pinned metric vocabulary);
+  7. every ``benchmarks/scenarios/*.json`` validates against the
+     scenario schema (``repro.fleet.scenarios::validate_scenario`` —
+     unknown keys and non-reproducible seeds are rejected) and its
+     ``name`` is documented somewhere in the docs corpus.
 
 Exits non-zero with a report on failure. Wired into scripts/tier1.sh as
 a *fatal* gate: docs drift blocks the tier-1 verify.
@@ -169,13 +173,33 @@ def main() -> int:
                     f"docs/observability.md: metric `{m.group(1)}` not "
                     f"found in src/repro/obs/")
 
+    # 7) scenario suites validate and are documented
+    sys.path.insert(0, str(ROOT / "src"))
+    from repro.fleet.scenarios import load_scenario_paths, \
+        validate_scenario
+    import json
+    scen_paths = load_scenario_paths(ROOT / "benchmarks" / "scenarios")
+    if not scen_paths:
+        problems.append("benchmarks/scenarios/ has no scenario files")
+    for p in scen_paths:
+        doc = json.loads(p.read_text())
+        for issue in validate_scenario(doc):
+            problems.append(
+                f"{p.relative_to(ROOT)}: invalid scenario — {issue}")
+        name = doc.get("name", "")
+        if name and name not in corpus:
+            problems.append(
+                f"scenario `{name}` ({p.relative_to(ROOT)}) is not "
+                f"documented in README.md or docs/")
+
     if problems:
         print("docs-check FAILED:")
         for p in problems:
             print(f"  - {p}")
         return 1
     print(f"docs-check OK: {len(docs)} docs, all packages mentioned, "
-          f"all links, module refs and CLI flags resolve")
+          f"all links, module refs and CLI flags resolve, "
+          f"{len(scen_paths)} scenario suites validate")
     return 0
 
 

@@ -15,14 +15,21 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python benchmarks/bench_serve.py --smoke
 # fleet gate: deterministic elastic scenario — the re-scale arm must
-# beat queue-only goodput on the same failure trace, and the simulated
-# checkpoint-interval optimum must match the closed-form search
+# beat queue-only goodput on the same failure trace, the simulated
+# checkpoint-interval optimum must match the closed-form search — plus
+# the serve-scenario arm: the autoscale-beats-static and
+# burst-SLO-violation scenario suites (benchmarks/scenarios/) must pass
+# their expect checks, a double-run must be byte-identical, and
+# serve_calibration_check must recover a synthetic service law
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python benchmarks/bench_fleet.py --smoke
 # trace gate: serve a short arrivals trace with telemetry on, then
 # validate the Chrome trace (balanced spans, non-negative durations),
-# replay the measured steptrace through the fleet simulator, and merge
-# serve + train + fleet events into one validating timeline
+# replay the measured steptrace through the fleet simulator, merge
+# serve + train + fleet events into one validating timeline, and hold
+# the serve calibration gate: a saturated one-replica serve sim
+# calibrated from the measured steptrace must reproduce the engine's
+# per-chunk decode time within tolerance
 TRACE_TMP="$(mktemp -d)"
 trap 'rm -rf "$TRACE_TMP"' EXIT
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \

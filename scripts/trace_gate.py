@@ -13,7 +13,11 @@ wrote, then closes the whole telemetry loop in-process:
      with the sim recording into the SAME tracer as the trainer;
   4. merge everything into one timeline and require the ``serve``,
      ``train`` and ``fleet`` categories to validate together — the
-     ISSUE's "one Chrome trace can contain all three" acceptance.
+     ISSUE's "one Chrome trace can contain all three" acceptance;
+  5. calibrate a ``ServiceTimeModel`` from the same measured steptrace
+     and require ``serve_calibration_check`` to hold: a saturated
+     one-replica serve sim must reproduce the engine's per-chunk decode
+     time within tolerance (the serve-side bridge).
 
   PYTHONPATH=src python scripts/trace_gate.py TRACE.json STEPTRACE.json
 
@@ -30,6 +34,7 @@ import tempfile
 sys.path.insert(0, "src")
 
 from repro.configs.registry import get_smoke
+from repro.fleet.bridge import serve_calibration_check
 from repro.fleet.perf import StepTimeModel, job_spec_from_trace
 from repro.fleet.sim import FleetConfig, FleetSimulator
 from repro.launch.train import build_trainer
@@ -97,6 +102,17 @@ def main() -> int:
     failures += check("merged serve+train+fleet timeline",
                       validate_chrome_trace(
                           merged, require_cats=["serve", "train", "fleet"]))
+
+    # 5. serve-side bridge: sim service times vs the measured trace ---------
+    cal = serve_calibration_check(st)
+    failures += check("serve calibration", [] if cal["ok"] == 1.0 else [
+        f"sim per-chunk {cal['sim_chunk_s'] * 1e3:.2f}ms vs measured "
+        f"{cal['measured_chunk_s'] * 1e3:.2f}ms (rel_err "
+        f"{cal['rel_err']:.3f}, {cal['steady_admissions']:.0f} steady "
+        f"admissions at batch {cal['target_batch']:.0f})"])
+    print(f"  calibrated service model: rel_err {cal['rel_err']:.2e} "
+          f"over {cal['steady_admissions']:.0f} admissions at batch "
+          f"{cal['target_batch']:.0f}")
 
     print("trace gate:", "FAILED" if failures else "PASSED")
     return failures

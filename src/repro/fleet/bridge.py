@@ -75,6 +75,63 @@ def simulate_trainer_plan(
     return job.ledger
 
 
+def serve_calibration_check(trace, *, tol: float = 0.25,
+                            requests: int = 160) -> Dict[str, float]:
+    """The serve-side bridge: pin the sim's per-chunk service times to a
+    *measured* ``ServeEngine`` steptrace.
+
+    Calibrates a ``ServiceTimeModel`` from the trace, then drives a
+    one-replica serve sim to saturation at the trace's mean recorded
+    batch and compares the realized per-chunk decode time
+    (``tpot * chunk_steps`` of steady-state admissions) against the
+    ``MeasuredStepTimeModel`` replay mean of the same trace. ``ok`` iff
+    the relative error is within ``tol`` — the tier-1 calibration gate
+    (``scripts/trace_gate.py``) fails on a miss."""
+    from repro.fleet.perf import StepTimeModel, service_model_from_trace
+    from repro.fleet.serve_jobs import (ArrivalProcess, ServeJobSpec,
+                                        ServeSLO)
+    from repro.obs.steptrace import EFFECTIVE_KINDS
+
+    model = service_model_from_trace(trace)
+    measured = StepTimeModel.from_trace(trace)
+    batches = [float(e.features.get("batch", 1.0))
+               for e in trace.events if e.kind in EFFECTIVE_KINDS]
+    target_b = max(1, round(sum(batches) / len(batches)))
+    out_tokens = model.chunk_steps * 4
+    service_s = model.service_s(1, 0, out_tokens, target_b)
+    # arrivals outpace the replica's saturated throughput (target_b
+    # requests per service_s) 2x, so after warm-up every admission
+    # happens at a full batch of target_b
+    horizon = 2.0 * requests * service_s / target_b + 1.0
+    arr = ArrivalProcess(rate_rps=2.0 * target_b / service_s,
+                         prompt_tokens=2, output_tokens=out_tokens,
+                         turns_mean=1.0)
+    svc = ServeJobSpec(
+        name="cal", chips=64, arrivals=arr,
+        slo=ServeSLO(ttft_s=1e9, tpot_s=1e9), service=model,
+        replicas=1, max_replicas=1, max_batch=target_b,
+        scale_policy="fixed", spinup_s=0.0)
+    sim = FleetSimulator(FleetConfig(tpu="ironwood", total_cubes=1),
+                         [], serve_jobs=[svc])
+    sim.run(horizon)
+    log = sim.serve["cal"].request_log
+    chunks = [tpot * model.chunk_steps
+              for (_, _, _, _, _, _, batch, _, tpot, _) in log
+              if batch == target_b]
+    measured_mean = measured.mean_step_s
+    sim_mean = (sum(chunks) / len(chunks)) if chunks else 0.0
+    rel_err = (abs(sim_mean - measured_mean) / measured_mean
+               if measured_mean else float("inf"))
+    return {
+        "target_batch": float(target_b),
+        "steady_admissions": float(len(chunks)),
+        "sim_chunk_s": sim_mean,
+        "measured_chunk_s": measured_mean,
+        "rel_err": rel_err,
+        "ok": float(len(chunks) >= 8 and rel_err <= tol),
+    }
+
+
 def run_bridge(
     *,
     arch: str = "qwen2_0_5b",

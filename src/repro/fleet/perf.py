@@ -158,6 +158,95 @@ class MeasuredStepTimeModel:
         return self.durations
 
 
+@dataclasses.dataclass(frozen=True)
+class ServiceTimeModel:
+    """Batch- and prefix-hit-conditioned serve service times.
+
+    The serve-job analogue of ``MeasuredStepTimeModel``: prices a
+    request's prefill from its *uncached* prompt tokens and its decode
+    from a per-chunk cost that is affine in the live batch — exactly the
+    two features the real ``ServeEngine`` records per steptrace event
+    (``tokens``/``cached`` on prefill events, ``batch``/``steps`` on
+    decode chunks), so ``from_steptrace`` can calibrate every
+    coefficient from a recorded run. ``fleet.bridge
+    .serve_calibration_check`` pins the round trip: a sim driven by this
+    model must reproduce the measured per-chunk times."""
+
+    prefill_s_per_token: float = 1e-4
+    chunk_base_s: float = 0.02        # decode chunk at batch=1
+    chunk_per_slot_s: float = 0.002   # marginal chunk cost per extra slot
+    chunk_steps: int = 8              # tokens each request emits per chunk
+    source: str = "analytic"
+
+    def __post_init__(self) -> None:
+        if self.prefill_s_per_token < 0 or self.chunk_per_slot_s < 0:
+            raise ValueError("service-time coefficients must be >= 0")
+        if self.chunk_base_s <= 0 or self.chunk_steps <= 0:
+            raise ValueError("chunk_base_s and chunk_steps must be positive")
+
+    def prefill_s(self, prompt_tokens: int, cached_tokens: int = 0) -> float:
+        """Prefill wall time: only the uncached suffix costs compute
+        (the engine's prefix-cache hit skips the shared prefix)."""
+        return max(prompt_tokens - cached_tokens, 0) * \
+            self.prefill_s_per_token
+
+    def chunk_s(self, batch: int) -> float:
+        """One decode chunk at ``batch`` live requests."""
+        return self.chunk_base_s + \
+            self.chunk_per_slot_s * max(batch - 1, 0)
+
+    def tpot_s(self, batch: int) -> float:
+        """Per-output-token time at ``batch`` live requests."""
+        return self.chunk_s(batch) / self.chunk_steps
+
+    def service_s(self, prompt_tokens: int, cached_tokens: int,
+                  output_tokens: int, batch: int) -> float:
+        return self.prefill_s(prompt_tokens, cached_tokens) + \
+            output_tokens * self.tpot_s(batch)
+
+
+def service_model_from_trace(
+        trace: StepTrace,
+        kinds: Sequence[str] = EFFECTIVE_KINDS) -> ServiceTimeModel:
+    """Calibrate a ``ServiceTimeModel`` from a recorded ``ServeEngine``
+    steptrace — the serve-side twin of ``StepTimeModel.from_trace``.
+
+    Decode chunks: least-squares affine fit of chunk duration vs the
+    recorded ``batch`` feature (falls back to the mean when the batch
+    never varies). Prefill: through-origin per-token fit of prefill
+    duration vs the recorded (already cache-discounted) ``tokens``
+    feature. ``chunk_steps`` is the mean recorded ``steps`` per chunk."""
+    kinds = tuple(kinds)
+    batches = trace.feature_values("batch", kinds, default=1.0)
+    chunk_ds = trace.durations(kinds)
+    if not chunk_ds:
+        raise ValueError(
+            f"trace from {trace.source!r} has no decode events of kinds "
+            f"{kinds} to calibrate from")
+    n = len(chunk_ds)
+    mean_b = sum(batches) / n
+    mean_d = sum(chunk_ds) / n
+    var_b = sum((b - mean_b) ** 2 for b in batches) / n
+    if var_b > 1e-12:
+        slope = sum((b - mean_b) * (d - mean_d)
+                    for b, d in zip(batches, chunk_ds)) / n / var_b
+        slope = max(slope, 0.0)
+    else:
+        slope = 0.0
+    base = mean_d - slope * (mean_b - 1.0)  # value of the fit at batch=1
+    if base <= 0.0:  # degenerate fit (tiny traces): keep the mean exact
+        slope, base = 0.0, mean_d
+    steps = [s for s in trace.feature_values("steps", kinds) if s > 0]
+    chunk_steps = max(1, round(sum(steps) / len(steps))) if steps else 1
+    tok = sum(trace.feature_values("tokens", ("prefill",)))
+    per_tok = (sum(trace.durations(("prefill",))) / tok
+               if tok > 0 else 0.0)
+    return ServiceTimeModel(
+        prefill_s_per_token=per_tok, chunk_base_s=base,
+        chunk_per_slot_s=slope, chunk_steps=chunk_steps,
+        source=trace.source)
+
+
 def job_spec_from_trace(
     name: str,
     trace: StepTrace,

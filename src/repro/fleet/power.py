@@ -95,6 +95,29 @@ class PowerModel:
                                       if eflops else float("inf"))
         return out
 
+    def serve_summary(self, ledger: GoodputLedger, chips: int, *,
+                      good_tokens: float,
+                      total_tokens: float) -> Dict[str, float]:
+        """Joules-per-token for a serve job, through the *same* ledger
+        integration training uses: SLO-good busy time is ``steps``,
+        violating busy time is ``rework`` (full TDP either way — the
+        chips clocked those tokens), idle/spin-up/recovery draw the idle
+        fraction. ``chips`` is per-replica chips times the replica count
+        the ledger describes (an upper bound under autoscaling, like the
+        elastic caveat above)."""
+        energy_j = self.job_energy_joules(ledger, chips)
+        out = {
+            "energy_j": energy_j,
+            "energy_kwh": energy_j / 3.6e6,
+            "good_tokens": good_tokens,
+            "total_tokens": total_tokens,
+            "joules_per_token": (energy_j / total_tokens
+                                 if total_tokens else float("inf")),
+            "joules_per_good_token": (energy_j / good_tokens
+                                      if good_tokens else float("inf")),
+        }
+        return out
+
 
 # ---------------------------------------------------------------------------
 # Cross-generation sustainability trend (Figure 5 re-derived in joules).

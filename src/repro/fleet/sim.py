@@ -35,6 +35,17 @@ while k others are in flight takes (k+1)x the uncontended time), and a
 snapshot only becomes durable when its write *completes* — a failure
 mid-write rolls back to the previous checkpoint.
 
+Serve jobs (``fleet.serve_jobs``) run alongside: open-loop request
+arrivals (``serve_session``/``serve_req`` events) feed per-replica
+queues whose service times come from a steptrace-calibrated
+``ServiceTimeModel``; replicas are OCS allocations (``"job/rK"``) that
+take cube failures like any training slice (substitution or teardown)
+and autoscale against queue depth / SLO violations (``serve_ctl``),
+contending with training jobs for cubes. Their ledgers speak the same
+five-kind grammar — SLO-good busy time is ``steps``, violating busy
+time is ``rework`` — so goodput and power/carbon pipelines need no new
+vocabulary.
+
 Progress is step-quantized but simulated analytically — between events a
 job's step count is a closed-form function of time, so a week of
 simulated pod time costs thousands of events, not billions of steps.
@@ -61,6 +72,8 @@ from repro.core.sdc import SDCRateModel
 from repro.core.topology import CUBE
 from repro.fleet.events import Event, EventEngine
 from repro.fleet.jobs import JobRuntime, JobSpec
+from repro.fleet.serve_jobs import (ServeJobRuntime, ServeJobSpec,
+                                    ServeReplica)
 from repro.fleet.trace import TraceRecorder
 
 
@@ -96,8 +109,8 @@ class FleetConfig:
 
 class FleetSimulator:
     def __init__(self, cfg: FleetConfig, jobs: Sequence[JobSpec],
-                 *, tracer=None):
-        names = [j.name for j in jobs]
+                 *, serve_jobs: Sequence[ServeJobSpec] = (), tracer=None):
+        names = [j.name for j in jobs] + [s.name for s in serve_jobs]
         if len(set(names)) != len(names):
             raise ValueError("duplicate job names")
         self.cfg = cfg
@@ -110,6 +123,9 @@ class FleetSimulator:
         self.trace = TraceRecorder(tracer=tracer)
         self.jobs: Dict[str, JobRuntime] = {
             j.name: JobRuntime(spec=j) for j in jobs}
+        self.serve: Dict[str, ServeJobRuntime] = {
+            s.name: ServeJobRuntime(spec=s) for s in serve_jobs}
+        self._replica_owner: Dict[str, str] = {}  # alloc name -> serve job
         self.stats = {"cube_failures": 0, "repairs": 0, "starvations": 0,
                       "rescales": 0, "grow_backs": 0,
                       "sdc_corruptions": 0, "sdc_detections": 0}
@@ -118,6 +134,13 @@ class FleetSimulator:
         self._hosts_per_cube = max(1, CUBE.chips // self.spec.tpus_per_host)
         for j in jobs:
             self.engine.schedule_at(j.arrival_s, "arrival", job=j.name)
+        for rt in self.serve.values():
+            # a per-job RNG keyed on (fleet seed, job name) keeps the
+            # request trace identical across autoscale policies and
+            # independent of the failure draws below
+            rt.seed_rng(cfg.seed)
+            self.engine.schedule_at(rt.spec.arrival_s, "serve_live",
+                                    job=rt.spec.name)
         if cfg.install_schedule:
             # nothing is installed until the first waypoint lands
             self.sched.set_installed(())
@@ -465,6 +488,174 @@ class FleetSimulator:
         job.segment_start = t + restore + rework * st
         self._schedule_segment(job)
 
+    # ------------------------------------------------------------ serve jobs
+
+    def _serve_add_replica(self, rt: ServeJobRuntime) -> bool:
+        """Allocate one more replica slice through the same OCS scheduler
+        training jobs use — serve capacity *contends*. Returns False
+        (and counts a blocked scale) when no slice fits."""
+        now = self.engine.now
+        spec = rt.spec
+        idx = rt.next_replica
+        name = f"{spec.name}/r{idx}"
+        alloc = self.sched.allocate(name, spec.chips)
+        if alloc is None:
+            rt.scale_blocked += 1
+            return False
+        rt.next_replica += 1
+        ready = now + spec.spinup_s
+        rt.replicas[name] = ServeReplica(
+            idx=idx, name=name, alloc=alloc, ready_at=ready, last_t=ready)
+        self._replica_owner[name] = spec.name
+        rt.peak_replicas = max(rt.peak_replicas, len(rt.replicas))
+        if spec.spinup_s > 0:
+            rt.ledger.record_restore(spec.spinup_s,
+                                     note=f"{name} spin-up")
+            self.trace.duration(name, "restore", now, spec.spinup_s)
+        self.trace.instant("serve_scale", now, {
+            "job": spec.name, "replica": name, "dir": "up"})
+        self.engine.schedule_at(ready, "serve_ready", job=spec.name,
+                                replica=name)
+        return True
+
+    def _serve_retire(self, rt: ServeJobRuntime, rep: ServeReplica) -> None:
+        """Release a replica's slice back to the pod and give waiting
+        training jobs their chance at the freed cubes."""
+        rt.retire_replica(rep, self.engine.now)
+        self.sched.release(rep.name)
+        self._replica_owner.pop(rep.name, None)
+        self._admit_queued()
+        self._try_grow()
+
+    def _serve_drain_queue(self, rt: ServeJobRuntime) -> None:
+        now = self.engine.now
+        while rt.queue:
+            rep = rt.pick_replica(now)
+            if rep is None:
+                return
+            self._serve_start(rt, rep, rt.queue.pop(0))
+
+    def _serve_start(self, rt: ServeJobRuntime, rep: ServeReplica,
+                     req) -> None:
+        payload = rt.start_service(rep, req, self.engine.now)
+        self.engine.schedule_at(float(payload["done"]), "serve_done",
+                                **payload)
+
+    def _handle_replica_failure(self, rt: ServeJobRuntime, repname: str,
+                                cube: int, note: str) -> None:
+        """A cube under a serve replica died. In-flight requests requeue
+        (their arrival clocks keep running — the disruption lands in
+        TTFT), then OCS substitution: a spare patches the slice and the
+        replica reloads (detect + reconfig + restore, excluded from
+        busy/idle); no spares tears the replica down — the control loop
+        may re-add one later."""
+        now = self.engine.now
+        cfg = self.cfg
+        rt.settle(now)
+        rep = rt.replicas[repname]
+        rt.requeue_inflight(rep)
+        rt.ledger.record_detection(cfg.detect_s, note=note)
+        self.trace.duration(repname, "detect", now, cfg.detect_s)
+        patched = self.sched.substitute(repname)
+        if patched is not None:
+            restore = cfg.reconfig_s + cfg.restore_s
+            rep.alloc = patched
+            rep.ready_at = now + cfg.detect_s + restore
+            rep.last_t = rep.ready_at
+            rt.ledger.record_restore(restore,
+                                     note="replica ocs reconfig + reload")
+            self.trace.duration(repname, "restore", now + cfg.detect_s,
+                                restore)
+            self.engine.schedule_at(rep.ready_at, "serve_ready",
+                                    job=rt.spec.name, replica=repname)
+        else:
+            rt.replicas_lost += 1
+            self.trace.instant("serve_replica_lost", now, {
+                "job": rt.spec.name, "replica": repname})
+            self._serve_retire(rt, rep)
+        self._serve_drain_queue(rt)
+
+    def _route_failure(self, impacted: Optional[str], cube: int,
+                       note: str) -> None:
+        """Failures land on whoever owns the cube: a training job or a
+        serve replica (allocation names ``job/rK``)."""
+        if impacted is None:
+            return
+        owner = self._replica_owner.get(impacted)
+        if owner is not None:
+            self._handle_replica_failure(self.serve[owner], impacted,
+                                         cube, note)
+        else:
+            self._handle_job_failure(self.jobs[impacted], cube, note=note)
+
+    def _on_serve_live(self, ev: Event) -> None:
+        rt = self.serve[ev["job"]]
+        rt.state = "live"
+        for _ in range(rt.spec.replicas):
+            self._serve_add_replica(rt)
+        self._schedule_next_session(rt, self.engine.now)
+        self.engine.schedule(rt.spec.control_interval_s, "serve_ctl",
+                             job=rt.spec.name)
+
+    def _schedule_next_session(self, rt: ServeJobRuntime,
+                               t: float) -> None:
+        nxt = rt.draw_next_session_t(t)
+        self.engine.schedule_at(nxt, "serve_session", job=rt.spec.name,
+                                t=nxt)
+
+    def _on_serve_session(self, ev: Event) -> None:
+        rt = self.serve[ev["job"]]
+        t0 = ev["t"]
+        for req in rt.build_session(t0):
+            self.engine.schedule_at(req.arrival_s, "serve_req",
+                                    job=rt.spec.name, req=req)
+        self._schedule_next_session(rt, t0)
+
+    def _on_serve_req(self, ev: Event) -> None:
+        rt = self.serve[ev["job"]]
+        rt.arrived += 1
+        rt.queue.append(ev["req"])  # FIFO through the central queue
+        self._serve_drain_queue(rt)
+
+    def _on_serve_done(self, ev: Event) -> None:
+        rt = self.serve[ev["job"]]
+        rep = rt.finish_service(ev.payload, self.engine.now)
+        if rep is not None:
+            self._serve_drain_queue(rt)
+
+    def _on_serve_ready(self, ev: Event) -> None:
+        rt = self.serve[ev["job"]]
+        rep = rt.replicas.get(ev["replica"])
+        if rep is None or rep.ready_at > self.engine.now:
+            return  # torn down, or superseded by a failure re-arm
+        self._serve_drain_queue(rt)
+
+    def _on_serve_ctl(self, ev: Event) -> None:
+        """Autoscale control tick: settle the ledger window, then act on
+        queue depth / SLO violations (see ServeJobRuntime
+        .scale_decision)."""
+        rt = self.serve[ev["job"]]
+        now = self.engine.now
+        rt.settle(now)
+        decision = rt.scale_decision(now)
+        if decision == "up":
+            if self._serve_add_replica(rt):
+                rt.scale_ups += 1
+        elif decision == "down":
+            rep = rt.idle_replica(now)
+            if rep is not None:
+                rt.scale_downs += 1
+                self.trace.instant("serve_scale", now, {
+                    "job": rt.spec.name, "replica": rep.name,
+                    "dir": "down"})
+                self._serve_retire(rt, rep)
+        rt.viol_since_tick = 0
+        self.trace.counter(f"serve:{rt.spec.name}", now, {
+            "replicas": float(len(rt.replicas)),
+            "queue_depth": float(len(rt.queue))})
+        self.engine.schedule(rt.spec.control_interval_s, "serve_ctl",
+                             job=rt.spec.name)
+
     # -------------------------------------------------------------- handlers
 
     def _on_arrival(self, ev: Event) -> None:
@@ -502,9 +693,7 @@ class FleetSimulator:
                            {"cube": cube, "host": host})
         self.engine.schedule(self.cfg.repair_hours * 3600.0, "repair",
                              cube=cube)
-        if impacted is not None:
-            self._handle_job_failure(self.jobs[impacted], cube,
-                                     note=f"cube {cube} died")
+        self._route_failure(impacted, cube, note=f"cube {cube} died")
 
     def _on_plan_fail(self, ev: Event) -> None:
         job = self.jobs[ev["job"]]
@@ -523,12 +712,12 @@ class FleetSimulator:
         self.engine.schedule(self.cfg.repair_hours * 3600.0, "repair",
                              cube=cube)
         if impacted is not None and impacted != job.spec.name:
-            # the planned cube belongs to another job: its owner takes a
-            # real failure; the planning job still observes its planned
-            # interruption (driver semantics: a planned failure always
-            # restores the planning job, owned cube or not)
-            self._handle_job_failure(self.jobs[impacted], cube,
-                                     note=f"cube {cube} died")
+            # the planned cube belongs to another job (or a serve
+            # replica): its owner takes a real failure; the planning job
+            # still observes its planned interruption (driver semantics:
+            # a planned failure always restores the planning job, owned
+            # cube or not)
+            self._route_failure(impacted, cube, note=f"cube {cube} died")
         self._handle_job_failure(job, cube, note=f"cube {cube} died")
 
     def _on_repair(self, ev: Event) -> None:
@@ -664,6 +853,12 @@ class FleetSimulator:
         "ckpt_write": _on_ckpt_write,
         "sdc_corrupt": _on_sdc_corrupt,
         "sdc_detect": _on_sdc_detect,
+        "serve_live": _on_serve_live,
+        "serve_session": _on_serve_session,
+        "serve_req": _on_serve_req,
+        "serve_done": _on_serve_done,
+        "serve_ready": _on_serve_ready,
+        "serve_ctl": _on_serve_ctl,
     }
 
     # ------------------------------------------------------------------ run
@@ -684,6 +879,9 @@ class FleetSimulator:
                 if wait > 0.0:
                     job.ledger.record_idle(wait, note="queued for cubes")
                     job.queued_since = until_s
+        for rt in self.serve.values():
+            if rt.state == "live":
+                rt.settle(until_s)
 
     # -------------------------------------------------------------- reports
 
@@ -697,13 +895,17 @@ class FleetSimulator:
             s["rescales"] = float(job.rescales)
             s["grow_backs"] = float(job.grow_backs)
             out[name] = s
+        for name, rt in self.serve.items():
+            s = rt.ledger.summary()
+            s.update(rt.slo_summary())  # key sets are disjoint
+            out[name] = s
         return out
 
     def fleet_summary(self) -> Dict[str, float]:
         gp = [j.ledger.goodput for j in self.jobs.values()
               if j.ledger.total_seconds > 0]
         steps = sum(j.base_step for j in self.jobs.values())
-        return {
+        out = {
             **{k: float(v) for k, v in self.stats.items()},
             "ocs_reconfigs": float(self.sched.reconfig_count),
             "spare_cubes": float(self.sched.spare_cubes()),
@@ -714,3 +916,20 @@ class FleetSimulator:
             "min_goodput": min(gp) if gp else 1.0,
             "mean_goodput": sum(gp) / len(gp) if gp else 1.0,
         }
+        if self.serve:
+            good = sum(rt.good_tokens for rt in self.serve.values())
+            total = sum(rt.total_tokens for rt in self.serve.values())
+            out["serve_requests"] = float(sum(
+                rt.arrived for rt in self.serve.values()))
+            out["serve_finished"] = float(sum(
+                rt.finished for rt in self.serve.values()))
+            out["serve_slo_goodput"] = good / total if total else 1.0
+            out["serve_scale_ups"] = float(sum(
+                rt.scale_ups for rt in self.serve.values()))
+            out["serve_scale_downs"] = float(sum(
+                rt.scale_downs for rt in self.serve.values()))
+            out["serve_scale_blocked"] = float(sum(
+                rt.scale_blocked for rt in self.serve.values()))
+            out["serve_replicas_lost"] = float(sum(
+                rt.replicas_lost for rt in self.serve.values()))
+        return out

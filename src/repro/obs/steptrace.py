@@ -75,6 +75,20 @@ class StepTrace:
         ds = self.durations(kinds)
         return sum(ds) / len(ds) if ds else 0.0
 
+    def feature_values(self, name: str,
+                       kinds: Optional[Sequence[str]] = None,
+                       default: float = 0.0) -> List[float]:
+        """One feature column across events, filtered to ``kinds``.
+
+        Parallel to ``durations(kinds)`` — same events, same order — so
+        calibration fits (``fleet.perf.service_model_from_trace``) can
+        zip feature columns against measured durations."""
+        if kinds is None:
+            return [e.features.get(name, default) for e in self.events]
+        kindset = set(kinds)
+        return [e.features.get(name, default) for e in self.events
+                if e.kind in kindset]
+
     def __len__(self) -> int:
         return len(self.events)
 

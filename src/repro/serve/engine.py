@@ -1180,7 +1180,8 @@ class ServeEngine:
             mtr["decode_tokens"].add(emitted)
             self.steptrace.record(
                 "spec_decode" if self._use_spec else "decode", chunk_dt,
-                batch=live, steps=self.chunk, tokens=emitted)
+                batch=live, steps=self.chunk, tokens=emitted,
+                queue_depth=len(sched.waiting))
             self.tracer.complete(
                 "decode_chunk", chunk_dt, pid=pid, tid=self._device_tid,
                 cat="serve", args={"live": live, "tokens": emitted})

@@ -456,6 +456,62 @@ def run(emit):
                  draft_k=2)
 
 
+def _fault_smoke() -> int:
+    """Fault-injection gate (fatal, tier-1): a disaggregated engine under
+    an injected schedule (prefill-worker kill + KV page flips + transfer
+    drops + stragglers) must (a) detect nonzero faults, (b) finish most
+    requests, and (c) emit byte-identical tokens for every survivor vs
+    the fault-free run on the same seed — the replay-recovery parity
+    contract (see docs/serving.md, Faults and degradation)."""
+    from repro.serve.faults import FaultInjector, FaultPlan
+
+    cfg = get_smoke("qwen2_0_5b")
+    params = init_params(jax.random.key(0), api.model_specs(cfg))
+    ctx = ModelContext(compute_dtype=jnp.float32, q_chunk=64)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, n) for n in (9, 13, 11)]
+    mk = lambda: [Request(rid=i, prompt=p, max_new=4)
+                  for i, p in enumerate(prompts)]
+
+    def build(faults=None):
+        return ServeEngine(cfg, ctx, window=32, max_batch=2, chunk=2,
+                           page_size=8, disaggregate=True,
+                           prefill_workers=2, faults=faults)
+
+    failures = 0
+    base = build().run(params, mk())
+    inj = FaultInjector(FaultPlan(
+        seed=7, worker_fail_rate=0.25, page_flip_rate=0.25,
+        transfer_drop_rate=0.2, straggler_rate=0.2))
+    eng = build(inj)
+    out = eng.run(params, mk())
+    fs = eng.fault_stats
+    injected = (fs["fault_worker_failures"] + fs["fault_page_corruptions"]
+                + fs["fault_transfer_drops"] + fs["fault_stragglers"])
+    if injected == 0:
+        print("FAILED [faults]: schedule injected nothing")
+        failures += 1
+    if fs["fault_page_corruptions"] > 0 and fs["fault_detections"] == 0:
+        print("FAILED [faults]: page corruptions went undetected")
+        failures += 1
+    if len(out) < 2:
+        print(f"FAILED [faults]: only {len(out)}/{len(prompts)} requests "
+              "survived the schedule")
+        failures += 1
+    for rid, toks in out.items():
+        if not np.array_equal(toks, base[rid]):
+            print(f"FAILED [faults]: survivor rid {rid} diverged: "
+                  f"{toks} != fault-free {base[rid]}")
+            failures += 1
+    print(f"smoke [faults]: {len(out)}/{len(prompts)} survivors "
+          f"token-identical under "
+          + " ".join(f"{k.split('fault_')[-1]}={fs[k]}" for k in (
+              "fault_worker_failures", "fault_page_corruptions",
+              "fault_transfer_drops", "fault_stragglers",
+              "fault_detections", "retry_requeues")))
+    return failures
+
+
 def run_smoke() -> int:
     """Fast interpret-mode kernel-routing gate for tier-1: every paged
     serving path (chunked cold prefill, suffix prefill, spec verify,
@@ -499,6 +555,9 @@ def run_smoke() -> int:
         print(f"smoke [{tag}]: kernel==oracle over "
               f"{sum(len(p) for p in prompts)} prompt + 8 decode tokens, "
               f"{compiles} span-prefill programs (stable)")
+    # fault-injection parity gate (fatal): survivors of an injected
+    # fault schedule must match the fault-free run byte for byte
+    failures += _fault_smoke()
     # sharded-parity gate (fatal): mesh decode == single-host decode,
     # disaggregated == co-located — in a forced-multi-device subprocess
     proc = _run_sharded_child("--sharded-smoke-inner")

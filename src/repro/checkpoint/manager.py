@@ -63,6 +63,11 @@ class CheckpointManager:
         os.makedirs(self.directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
+        # the step restore() actually loaded — older than the requested
+        # one when a corrupt checkpoint was quarantined and the previous
+        # complete manifest used instead. Callers computing a replay
+        # range must anchor on this, not on the step they asked for.
+        self.last_restored_step: Optional[int] = None
 
     # ------------------------------------------------------------------ save
 
@@ -129,10 +134,13 @@ class CheckpointManager:
     def all_steps(self) -> List[int]:
         out = []
         for name in os.listdir(self.directory):
-            if name.startswith("step_") and not name.endswith(".tmp"):
-                if os.path.exists(os.path.join(self.directory, name,
-                                               "manifest.json")):
-                    out.append(int(name[5:]))
+            # strict step_<digits> parse: skips ".tmp" partials AND
+            # ".corrupt" quarantined dirs
+            if not name.startswith("step_") or not name[5:].isdigit():
+                continue
+            if os.path.exists(os.path.join(self.directory, name,
+                                           "manifest.json")):
+                out.append(int(name[5:]))
         return sorted(out)
 
     def latest_step(self) -> Optional[int]:
@@ -143,7 +151,39 @@ class CheckpointManager:
                 shard_fn: Optional[Callable[[str, np.ndarray], Any]] = None
                 ) -> PyTree:
         """Restore into the structure of ``like``. ``shard_fn(key, array)``
-        may device_put each leaf with new shardings (elastic re-mesh)."""
+        may device_put each leaf with new shardings (elastic re-mesh).
+
+        A corrupt checkpoint (CRC mismatch or unreadable leaf) is
+        *quarantined* — renamed to ``<dir>.corrupt``, invisible to
+        ``all_steps``/``latest_step`` — and the previous complete
+        checkpoint restored instead, falling back as far as needed.
+        Only when no complete checkpoint survives does the original
+        ``IOError`` propagate. ``last_restored_step`` records the step
+        actually loaded, so replay ranges stay correct after fallback."""
+        while True:
+            try:
+                out = self._restore_step(step, like, shard_fn)
+                self.last_restored_step = step
+                return out
+            except IOError:
+                self._quarantine(step)
+                earlier = [s for s in self.all_steps() if s < step]
+                if not earlier:
+                    raise
+                step = earlier[-1]
+
+    def _quarantine(self, step: int) -> None:
+        path = os.path.join(self.directory, f"step_{step:08d}")
+        if not os.path.isdir(path):
+            return
+        target = path + ".corrupt"
+        if os.path.exists(target):
+            shutil.rmtree(target)
+        os.rename(path, target)
+
+    def _restore_step(self, step: int, like: PyTree,
+                      shard_fn: Optional[Callable[[str, np.ndarray], Any]]
+                      ) -> PyTree:
         path = os.path.join(self.directory, f"step_{step:08d}")
         with open(os.path.join(path, "manifest.json")) as fh:
             manifest = json.load(fh)
@@ -154,7 +194,13 @@ class CheckpointManager:
             meta = manifest["leaves"].get(key)
             if meta is None:
                 raise KeyError(f"checkpoint missing leaf {key!r}")
-            arr = np.load(os.path.join(path, meta["file"]))
+            try:
+                arr = np.load(os.path.join(path, meta["file"]))
+            except (OSError, ValueError, EOFError) as exc:
+                # truncated/unreadable leaf: same corruption class as a
+                # checksum mismatch (and handled by the same quarantine)
+                raise IOError(f"checksum mismatch restoring {key!r} "
+                              f"(corrupt checkpoint: {exc})") from exc
             if zlib.crc32(arr.tobytes()) != meta["crc32"]:
                 raise IOError(f"checksum mismatch restoring {key!r} "
                               "(corrupt checkpoint)")

@@ -41,7 +41,8 @@ from repro.fleet.bridge import grammar_ok
 from repro.fleet.jobs import SCALE_POLICIES, JobSpec
 from repro.fleet.perf import ServiceTimeModel
 from repro.fleet.power import PowerModel
-from repro.fleet.serve_jobs import (SERVE_SCALE_POLICIES, ArrivalProcess,
+from repro.fleet.serve_jobs import (SERVE_SCALE_POLICIES,
+                                    SERVE_SHED_POLICIES, ArrivalProcess,
                                     ServeJobSpec, ServeSLO)
 from repro.fleet.sim import FleetConfig, FleetSimulator
 
@@ -58,9 +59,9 @@ _TRAIN_KEYS = {"name", "chips", "total_steps", "step_time_s",
                "scale_policy", "min_cubes"}
 _SERVE_KEYS = {"name", "chips", "replicas", "min_replicas",
                "max_replicas", "max_batch", "scale_policy",
-               "control_interval_s", "spinup_s", "arrival_s",
-               "scale_up_queue_per_slot", "scale_down_util",
-               "slo", "arrivals", "service"}
+               "shed_policy", "control_interval_s", "spinup_s",
+               "arrival_s", "scale_up_queue_per_slot",
+               "scale_down_util", "slo", "arrivals", "service"}
 _SLO_KEYS = {f.name for f in dataclasses.fields(ServeSLO)}
 _ARRIVAL_KEYS = {f.name for f in dataclasses.fields(ArrivalProcess)}
 _SERVICE_KEYS = {f.name for f in dataclasses.fields(ServiceTimeModel)} \
@@ -143,6 +144,11 @@ def validate_scenario(doc: Any) -> List[str]:
                     problems.append(
                         f"{where}: scale_policy must be one of "
                         f"{SERVE_SCALE_POLICIES}")
+                if "shed_policy" in j and \
+                        j["shed_policy"] not in SERVE_SHED_POLICIES:
+                    problems.append(
+                        f"{where}: shed_policy must be one of "
+                        f"{SERVE_SHED_POLICIES}")
                 for sub, allowed in (("slo", _SLO_KEYS),
                                      ("arrivals", _ARRIVAL_KEYS),
                                      ("service", _SERVICE_KEYS)):

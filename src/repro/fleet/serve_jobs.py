@@ -59,6 +59,7 @@ from repro.core.topology import CUBE
 from repro.fleet.perf import ServiceTimeModel
 
 SERVE_SCALE_POLICIES = ("fixed", "auto")
+SERVE_SHED_POLICIES = ("none", "ttft")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -166,6 +167,11 @@ class ServeJobSpec:
     max_replicas: int = 4
     max_batch: int = 8  # concurrent requests per replica
     scale_policy: str = "fixed"
+    # "ttft": shed a queued request at dispatch when even its best-case
+    # TTFT (wait already accrued + prefill + one chunk, batch of 1)
+    # exceeds the SLO — serving it is guaranteed rework, and it
+    # head-of-line-blocks requests that could still be good.
+    shed_policy: str = "none"
     control_interval_s: float = 60.0
     spinup_s: float = 30.0
     arrival_s: float = 0.0  # service go-live time
@@ -178,6 +184,9 @@ class ServeJobSpec:
         if self.scale_policy not in SERVE_SCALE_POLICIES:
             raise ValueError(
                 f"scale_policy must be one of {SERVE_SCALE_POLICIES}")
+        if self.shed_policy not in SERVE_SHED_POLICIES:
+            raise ValueError(
+                f"shed_policy must be one of {SERVE_SHED_POLICIES}")
         if not 0 <= self.min_replicas <= self.replicas <= self.max_replicas:
             raise ValueError(
                 "need 0 <= min_replicas <= replicas <= max_replicas")
@@ -254,6 +263,7 @@ class ServeJobRuntime:
     ttft_viol: int = 0
     tpot_viol: int = 0
     preempted: int = 0
+    shed: int = 0
     good_tokens: int = 0
     total_tokens: int = 0
     viol_since_tick: int = 0
@@ -332,6 +342,23 @@ class ServeJobRuntime:
             if best is None or (rep.busy, rep.idx) < (best.busy, best.idx):
                 best = rep
         return best
+
+    def should_shed(self, req: ServeRequest, now: float) -> bool:
+        """Admission control at dispatch: under ``shed_policy="ttft"``, a
+        queued request whose *best-case* TTFT (accrued wait + prefill +
+        one decode chunk at batch 1) already violates the SLO is dropped
+        instead of served — it is guaranteed rework and head-of-line
+        blocks requests that could still meet their deadline."""
+        if self.spec.shed_policy != "ttft":
+            return False
+        m = self.spec.service
+        best_ttft = (now - req.arrival_s
+                     + m.prefill_s(req.prompt_tokens, req.cached_tokens)
+                     + m.chunk_s(1))
+        return best_ttft > self.spec.slo.ttft_s
+
+    def shed_request(self, req: ServeRequest) -> None:
+        self.shed += 1
 
     def start_service(self, rep: ServeReplica, req: ServeRequest,
                       now: float) -> Dict[str, object]:
@@ -492,6 +519,7 @@ class ServeJobRuntime:
             "ttft_viol": float(self.ttft_viol),
             "tpot_viol": float(self.tpot_viol),
             "preempted": float(self.preempted),
+            "shed": float(self.shed),
             "pending": float(pending),
             "ttft_p50_s": _pctl(self.ttfts, 0.50),
             "ttft_p95_s": _pctl(self.ttfts, 0.95),

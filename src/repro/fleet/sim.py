@@ -530,6 +530,12 @@ class FleetSimulator:
     def _serve_drain_queue(self, rt: ServeJobRuntime) -> None:
         now = self.engine.now
         while rt.queue:
+            if rt.should_shed(rt.queue[0], now):
+                req = rt.queue.pop(0)
+                rt.shed_request(req)
+                self.trace.instant("serve_shed", now, {
+                    "job": rt.spec.name, "rid": req.rid})
+                continue
             rep = rt.pick_replica(now)
             if rep is None:
                 return

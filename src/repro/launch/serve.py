@@ -59,7 +59,9 @@ from repro.models import api
 from repro.models.blocks import ModelContext
 from repro.models.params import init_params
 from repro.obs.trace import SpanTracer
+from repro.serve.admission import AdmissionController, AdmissionPolicy
 from repro.serve.engine import ServeEngine, quantize_weights
+from repro.serve.faults import FaultInjector, FaultPlan, startup_bist
 from repro.serve.scheduler import Request
 
 
@@ -146,6 +148,23 @@ def main() -> None:
     ap.add_argument("--prefill-workers", type=int, default=1)
     ap.add_argument("--link", choices=["ici", "dcn"], default="ici",
                     help="modeled prefill->decode page-transfer link")
+    ap.add_argument("--bist", action="store_true",
+                    help="run the functional built-in self-test (golden "
+                         "patterns through the real matmul and paged-decode "
+                         "kernels) before admitting traffic; refuse to "
+                         "start on mismatch")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="enable the deterministic fault injector with "
+                         "this schedule seed (worker kills, KV page "
+                         "flips, transfer drops, stragglers)")
+    ap.add_argument("--ttft-deadline", type=int, default=None,
+                    metavar="STEPS",
+                    help="shed requests whose best-case TTFT exceeds this "
+                         "many engine steps")
+    ap.add_argument("--spec-off-depth", type=int, default=None,
+                    metavar="DEPTH",
+                    help="drop speculative decoding while more than DEPTH "
+                         "requests queue")
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="append a timestamped JSONL metrics snapshot")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
@@ -163,6 +182,15 @@ def main() -> None:
                              f"have {jax.device_count()}")
         mesh = jax.make_mesh((d, m), ("data", "model"))
 
+    if args.bist:
+        res = startup_bist(interpret=True)
+        print(f"bist: matmul max_err={res.matmul_report.max_abs_err:.3e} "
+              f"paged_decode max_err={res.paged_decode_max_err:.3e} "
+              f"-> {'PASS' if res.passed else 'FAIL'}")
+        if not res.passed:
+            raise SystemExit(
+                "bist: kernel self-test failed; refusing to serve")
+
     cfg = get_smoke(args.arch) if args.smoke else get_arch(args.arch)
     ctx = ModelContext(
         compute_dtype=jnp.float32, q_chunk=1024, mamba_chunk=16,
@@ -177,6 +205,16 @@ def main() -> None:
     window = args.prompt_len + args.max_new
     paged = api.supports_paged_decode(cfg)
     tracer = SpanTracer() if args.trace_out else None
+    faults = None
+    if args.chaos is not None:
+        faults = FaultInjector(FaultPlan(
+            seed=args.chaos, worker_fail_rate=0.05, page_flip_rate=0.05,
+            transfer_drop_rate=0.05, straggler_rate=0.05))
+    admission = None
+    if args.ttft_deadline is not None or args.spec_off_depth is not None:
+        admission = AdmissionController(AdmissionPolicy(
+            ttft_deadline_steps=args.ttft_deadline,
+            spec_off_queue_depth=args.spec_off_depth))
     engine = ServeEngine(cfg, ctx, window=window, max_batch=args.max_batch,
                          chunk=args.chunk, page_size=args.page_size,
                          temperature=args.temperature,
@@ -186,7 +224,8 @@ def main() -> None:
                          mesh=mesh, rules=args.rules,
                          disaggregate=args.disaggregate,
                          prefill_workers=args.prefill_workers,
-                         transfer_link=args.link, tracer=tracer)
+                         transfer_link=args.link, tracer=tracer,
+                         faults=faults, admission=admission)
     mode = "paged" if engine.paged else "dense"
     if mesh is not None:
         mode += "/sharded"
@@ -219,6 +258,8 @@ def main() -> None:
             print(f"prefix_hit_rate={engine.prefix_hit_rate:.2f} "
                   f"acceptance_length={engine.acceptance_length:.2f} "
                   f"kv={engine.kv.counters}")
+        if faults is not None or admission is not None:
+            print(f"[faults] {dict(engine.fault_stats.items())}")
         if args.disaggregate:
             ts = engine.transfer_stats()
             print(f"[disagg] link={ts['link']} "

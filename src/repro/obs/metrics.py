@@ -105,6 +105,31 @@ CATALOG: Dict[str, Tuple[str, str, str]] = {
                             "tokens drained from decode chunks"),
     "serve_generated_tokens": ("counter", "tokens",
                                "tokens delivered to finished requests"),
+    # serve: fault injection / detection / recovery (engine fault_stats)
+    "serve_fault_worker_failures": ("counter", "failures",
+                                    "injected prefill-worker failures"),
+    "serve_fault_page_corruptions": ("counter", "pages",
+                                     "injected KV page corruptions"),
+    "serve_fault_pages_quarantined": ("counter", "pages",
+                                      "corrupt pages CRC-detected and "
+                                      "quarantined"),
+    "serve_fault_transfer_drops": ("counter", "drops",
+                                   "dropped prefill->decode transfers"),
+    "serve_fault_stragglers": ("counter", "chunks",
+                               "decode chunks hit by straggler delay"),
+    "serve_fault_detections": ("counter", "events",
+                               "fault events detected by the engine"),
+    # serve: request replay + terminal failure
+    "serve_retry_requeues": ("counter", "requests",
+                             "fault replays re-queued with backoff"),
+    "serve_retry_failures": ("counter", "requests",
+                             "requests terminally failed (budget spent)"),
+    # serve: SLO-aware admission shedding
+    "serve_shed_requests": ("counter", "requests",
+                            "requests shed at enqueue (TTFT unmeetable)"),
+    "serve_shed_spec_chunks": ("counter", "chunks",
+                               "chunks demoted from speculative decode "
+                               "under queue pressure"),
     # train: resilient-trainer lifecycle
     "train_steps": ("counter", "steps", "effective (non-replay) steps"),
     "train_replayed_steps": ("counter", "steps",

@@ -172,6 +172,10 @@ class ResilientTrainer:
                 restore_step = self.ckpt.latest_step()
                 assert restore_step is not None  # bootstrap guarantees one
                 state = self.ckpt.restore(restore_step, state)
+                # restore() may have quarantined a corrupt checkpoint and
+                # fallen back to an older one — re-anchor the replay range
+                # on the step actually loaded or it silently starts late.
+                restore_step = self.ckpt.last_restored_step
                 last_ckpt_step = restore_step
                 restore_dt = (time.monotonic() - t0
                               + self.failure_plan.restore_extra_s)

@@ -173,6 +173,16 @@ class ServeEngine:
     prefill_workers: int = 1
     transfer_link: str = "ici"  # "ici" | "dcn"
     transfer_hw: str = "tpu_v5e"  # hwspec generation for the transfer
+    # resilience: a serve.faults.FaultInjector turns on the chaos
+    # harness (page CRC stamping, per-boundary injection + detection +
+    # replay); None leaves the fault-free path bit-identical to an
+    # engine without the harness. ``admission`` is a
+    # serve.admission.AdmissionController (None admits everything).
+    # ``retry_budget`` bounds fault replays per request before the
+    # deterministic terminal failure (state="failed").
+    faults: Any = None
+    admission: Any = None
+    retry_budget: int = 3
     metrics: Any = None  # obs.MetricsRegistry (None -> fresh enabled one)
     tracer: Any = None  # obs.SpanTracer (None -> disabled)
 
@@ -313,6 +323,19 @@ class ServeEngine:
              "boundaries", "prefill_depth_sum", "prefill_depth_peak",
              "decode_depth_sum", "decode_depth_peak"),
             prefix="serve_")
+        if self.retry_budget < 0:
+            raise ValueError("retry_budget must be >= 0")
+        self.fault_stats = CounterDict(
+            self.metrics,
+            ("fault_worker_failures", "fault_page_corruptions",
+             "fault_pages_quarantined", "fault_transfer_drops",
+             "fault_stragglers", "fault_detections", "retry_requeues",
+             "retry_failures", "shed_requests", "shed_spec_chunks"),
+            prefix="serve_")
+        if self.faults is not None and self.paged:
+            # CRC-stamp published pages so injected corruption is caught
+            # at the next boundary — before any chunk could read it
+            self.kv.integrity_checks = True
         self._build_jitted()
         self._reset_carry()
 
@@ -826,6 +849,87 @@ class ServeEngine:
         self._n_out = self._n_out.at[slot].set(len(req.generated))
         self._max_new = self._max_new.at[slot].set(req.max_new)
 
+    # ------------------------------------------------------------- faults
+
+    def _fail_slot(self, slot: int, sched: ContinuousBatchingScheduler,
+                   clock: int, reason: str) -> None:
+        """Fault recovery for one running slot: release its pages,
+        freeze the slot, and replay the request (re-admission re-prefills
+        ``resume_prompt()`` past surviving cached pages — token-identical
+        under greedy, same as preemption resume) with exponential backoff
+        until the retry budget forces the deterministic terminal
+        failure."""
+        req = sched.running.get(slot)
+        if req is None:
+            return
+        if self.paged:
+            self.kv.release(slot)
+        self._done = self._done.at[slot].set(True)
+        self._parked.pop(slot, None)
+        pid = self._trace_pid
+        if slot in self._park_spans:
+            self.tracer.end(pid=pid, tid=slot)
+            self._park_spans.discard(slot)
+        self.tracer.end(pid=pid, tid=slot)  # req span
+        self.tracer.instant("fault_replay", pid=pid, tid=slot,
+                            cat="serve",
+                            args={"rid": req.rid, "reason": reason,
+                                  "retries": req.retries})
+        if req.retries >= self.retry_budget:
+            sched.fail(req)
+            self.fault_stats["retry_failures"] += 1
+        else:
+            backoff = self.chunk * (1 << min(req.retries, 6))
+            sched.requeue(req, not_before=clock + backoff)
+            self.fault_stats["retry_requeues"] += 1
+
+    def _apply_faults(self, boundary: int, clock: int,
+                      sched: ContinuousBatchingScheduler,
+                      pool: Optional[PrefillWorkerPool]) -> None:
+        """Inject this boundary's scheduled faults, then run detection —
+        in that order, before the chunk dispatch, so corrupted KV is
+        quarantined before any decode step could read it (which is what
+        makes survivor token-parity exact rather than probabilistic)."""
+        inj = self.faults
+        fs = self.fault_stats
+        pid = self._trace_pid
+        if pool is not None:
+            w = inj.worker_failure(boundary)
+            if w is not None:
+                lost = pool.fail_worker(w % pool.n_workers, clock)
+                fs["fault_worker_failures"] += 1
+                fs["fault_detections"] += 1
+                self.tracer.instant(
+                    "worker_fail", pid=pid, tid=self._device_tid,
+                    cat="serve", args={"worker": w % pool.n_workers,
+                                       "replaced": len(lost)})
+        if pool is not None and self._parked:
+            r = inj.transfer_drop(boundary)
+            if r is not None:
+                slot = sorted(self._parked)[r % len(self._parked)]
+                retry = inj.plan.transfer_retry_boundaries
+                self._parked[slot] = clock + retry * self.chunk
+                fs["fault_transfer_drops"] += 1
+                fs["fault_detections"] += 1
+                self.tracer.instant(
+                    "transfer_drop", pid=pid, tid=slot, cat="serve",
+                    args={"retry_boundaries": retry})
+        if self.paged:
+            r = inj.page_flip(boundary)
+            if r is not None:
+                pids = self.kv.corruptible_pages()
+                if pids:
+                    self.kv.corrupt_page(pids[r % len(pids)])
+                    fs["fault_page_corruptions"] += 1
+            # detection: CRC-verify every stamped page; quarantine
+            # mismatches and replay every request still mapping them
+            for bad_pid, _h in self.kv.verify_integrity():
+                fs["fault_detections"] += 1
+                fs["fault_pages_quarantined"] += 1
+                for slot in self.kv.slots_referencing(bad_pid):
+                    self._fail_slot(slot, sched, clock,
+                                    reason="kv_corruption")
+
     # ---------------------------------------------------------------- run
 
     def submit_check(self, req: Request) -> None:
@@ -904,9 +1008,11 @@ class ServeEngine:
             self.prefill_pool = pool
             self._parked = {}
         clock = 0
+        boundary = -1  # chunk-boundary index: the fault-schedule clock
         # max tokens one decode step can emit
         per_step = 1 + self.draft_k if self._use_spec else 1
         while sched.has_work() or (pool is not None and pool.pending()):
+            boundary += 1
             wall = now()
             for r in sched.waiting:
                 # "ready": first boundary at which the request is live
@@ -914,6 +1020,20 @@ class ServeEngine:
                 if r.arrival <= clock:
                     self._req_obs.setdefault(r.rid, {}) \
                         .setdefault("ready", wall)
+            if self.admission is not None:
+                # enqueue-time load shedding: a request whose best-case
+                # first token already misses its TTFT deadline is dropped
+                # before it consumes a prefill worker or decode slot
+                for r in list(sched.waiting):
+                    if r.arrival <= clock and self.admission.should_shed(
+                            r, clock, chunk=self.chunk,
+                            span_len=self.span_len,
+                            disaggregated=pool is not None):
+                        sched.shed_request(r)
+                        self.fault_stats["shed_requests"] += 1
+                        self.tracer.instant(
+                            "shed", pid=pid, tid=self._device_tid,
+                            cat="serve", args={"rid": r.rid})
             if pool is not None:
                 # 0) disaggregation bookkeeping: activate parked slots
                 #    whose modeled page transfer has landed (rewriting the
@@ -930,7 +1050,8 @@ class ServeEngine:
                             self.tracer.end(pid=pid, tid=slot)
                             self._park_spans.discard(slot)
                 for r in [r for r in sched.waiting
-                          if r.arrival <= clock and not r.prefill_done]:
+                          if r.arrival <= clock and not r.prefill_done
+                          and r.not_before <= clock]:
                     sched.waiting.remove(r)
                     pool.place(r, clock)
                 for r in pool.pop_ready(clock):
@@ -944,6 +1065,11 @@ class ServeEngine:
                 st["decode_depth_sum"] += len(sched.waiting)
                 st["decode_depth_peak"] = max(st["decode_depth_peak"],
                                               len(sched.waiting))
+            if self.faults is not None:
+                # inject this boundary's scheduled faults, then detect:
+                # quarantined pages and failed slots are settled before
+                # admission or the chunk can observe them
+                self._apply_faults(boundary, clock, sched, pool)
             # 1) page headroom for running slots; preempt youngest on
             #    pressure (its pages free up for the older requests)
             if self.paged:
@@ -1064,8 +1190,14 @@ class ServeEngine:
                 if pool is not None and pool.pending():
                     clock += self.chunk  # prefill workers still cooking
                     continue
-                # idle: jump the trace clock to the next arrival
-                nxt = min(r.arrival for r in sched.waiting)
+                if not sched.waiting:
+                    # shedding emptied the queue this boundary; the
+                    # loop condition settles whether work remains
+                    continue
+                # idle: jump the trace clock to the next arrival (or the
+                # earliest replay-backoff expiry, for requeued requests)
+                nxt = min(max(r.arrival, r.not_before)
+                          for r in sched.waiting)
                 clock = max(clock + self.chunk, nxt)
                 continue
             if (pool is not None and sched.running
@@ -1087,7 +1219,18 @@ class ServeEngine:
                 {k: v for k, v in self.kv.cache.items() if k != "pos"}
             table = self.kv.table_device() if self.paged else jnp.zeros(
                 (self.max_batch, 1), jnp.int32)
-            if self._use_spec:
+            # graceful degradation under queue pressure: spend this
+            # boundary's FLOPs on a plain chunk instead of the
+            # (1 + draft_k)-query speculative span. Token-identical by
+            # construction (acceptance only ever matches the model's own
+            # greedy targets), so the policy is a pure latency trade.
+            use_spec = self._use_spec
+            if use_spec and self.admission is not None \
+                    and self.admission.drop_speculation(
+                        len(sched.waiting)):
+                use_spec = False
+                self.fault_stats["shed_spec_chunks"] += 1
+            if use_spec:
                 (self._tok, self._pos, self._done, self._n_out, new_cache,
                  self._hist, toks) = self._run_chunk_spec(
                     params, table, self._tok, self._pos, self._done,
@@ -1107,6 +1250,18 @@ class ServeEngine:
                 self.kv.update(new_cache)
             self._t += self.chunk
             clock += self.chunk
+            if self.faults is not None:
+                # straggler: the chunk did one chunk of work but took
+                # extra boundaries of wall clock. Purely a clock event —
+                # per-request tokens are batch-composition independent,
+                # so stragglers shift TTFT/queue waits, never tokens.
+                extra = self.faults.straggler(boundary)
+                if extra:
+                    clock += extra * self.chunk
+                    self.fault_stats["fault_stragglers"] += 1
+                    self.tracer.instant(
+                        "straggler", pid=pid, tid=self._device_tid,
+                        cat="serve", args={"extra_boundaries": extra})
             self.counters["chunks"] += 1
             self.counters["decode_steps"] += self.chunk
             if pool is not None and self._parked:
@@ -1125,7 +1280,7 @@ class ServeEngine:
                 if slot in self._parked:
                     continue  # frozen in transfer: emitted PADs only
                 req = sched.running[slot]
-                if self._use_spec:
+                if use_spec:
                     # toks_h[slot]: (chunk, 1+draft_k); emitted tokens
                     # form a prefix of each step row
                     for step_row in toks_h[slot]:
@@ -1179,7 +1334,7 @@ class ServeEngine:
             mtr["chunk_hist"].observe(chunk_dt)
             mtr["decode_tokens"].add(emitted)
             self.steptrace.record(
-                "spec_decode" if self._use_spec else "decode", chunk_dt,
+                "spec_decode" if use_spec else "decode", chunk_dt,
                 batch=live, steps=self.chunk, tokens=emitted,
                 queue_depth=len(sched.waiting))
             self.tracer.complete(

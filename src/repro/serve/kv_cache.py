@@ -51,7 +51,8 @@ jitted decode chunk.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+import zlib
+from typing import Any, Dict, List, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -151,10 +152,23 @@ class PagedKVCache:
         self._index: Dict[int, Tuple[int, Tuple[int, ...]]] = {}
         self._published: Dict[int, int] = {}
         self._evictable: Dict[int, None] = {}
+        # integrity bookkeeping (the checkpoint manager's CRC trick
+        # applied to live pages): _page_crc stamps a published page's
+        # device bytes at publish time — published pages are immutable
+        # (writes past the full-page prefix, CoW forks before any other
+        # write), so a later mismatch is silent corruption, not a race.
+        # _quarantined chain hashes are barred from the index forever:
+        # a poisoned prefix can never be re-adopted or re-published.
+        # Stamping costs a device fetch per published page, so it is off
+        # unless the engine runs with a FaultInjector (or the caller
+        # opts in) — the fault-free path stays byte- and perf-identical.
+        self.integrity_checks = False
+        self._page_crc: Dict[int, int] = {}
+        self._quarantined: Set[int] = set()
         self.counters = {"prefix_lookups": 0, "prefix_hit_tokens": 0,
                          "pages_shared": 0, "pages_forked": 0,
                          "pages_evicted": 0, "pages_published": 0,
-                         "pages_allocated": 0}
+                         "pages_allocated": 0, "pages_quarantined": 0}
 
     # ---------------------------------------------------------- allocation
 
@@ -183,6 +197,7 @@ class PagedKVCache:
         if entry is not None and entry[0] == pid:
             del self._index[h]
         self._evictable.pop(pid, None)
+        self._page_crc.pop(pid, None)
 
     def _touch(self, pid: int) -> None:
         """Move an evictable page to the most-recently-used end."""
@@ -324,18 +339,22 @@ class PagedKVCache:
 
     def register_prefix(self, slot: int, tokens: np.ndarray) -> int:
         """Publish the slot's full-page prefix KV into the global index.
-        Stops at the first table hole (SWA trim breaks the chain). Pages
-        already indexed (e.g. adopted ones) are left canonical. Returns
-        the number of newly published pages."""
+        Stops at the first table hole (SWA trim breaks the chain) or at
+        a quarantined chain hash (every later hash folds the poisoned
+        one, so the whole tail stays out of the index). Pages already
+        indexed (e.g. adopted ones) are left canonical. Returns the
+        number of newly published pages."""
         n = 0
         for i, (h, blk) in enumerate(self._prefix_blocks(tokens)):
             pid = int(self._table[slot, i])
-            if pid == 0:
+            if pid == 0 or h in self._quarantined:
                 break
             if h in self._index:
                 continue  # identical content already published
             self._published[pid] = h
             self._index[h] = (pid, blk)
+            if self.integrity_checks:
+                self._page_crc[pid] = self._page_bytes_crc(pid)
             n += 1
         self.counters["pages_published"] += n
         return n
@@ -370,6 +389,57 @@ class PagedKVCache:
                 if not self.fork(slot, i, copy_fn):
                     return False
         return True
+
+    # ---------------------------------------------------------- integrity
+
+    def _page_bytes_crc(self, pid: int) -> int:
+        """CRC32 over the page's device bytes across every pool leaf
+        (k, v, and int8 scale pages), in deterministic pytree order."""
+        crc = 0
+        for leaf in jax.device_get(
+                [leaf[:, pid] for leaf in jax.tree.leaves(self.pages)]):
+            crc = zlib.crc32(np.ascontiguousarray(leaf).tobytes(), crc)
+        return crc
+
+    def corruptible_pages(self) -> List[int]:
+        """Stamped published pages, sorted — the fault injector's victim
+        pool (deterministic target selection by drawn rank)."""
+        return sorted(self._page_crc)
+
+    def corrupt_page(self, pid: int) -> None:
+        """Flip the page's content in place (fault injection): every
+        element changes (x -> 1 - x for x <= 0, else -x), including int8
+        pools, so a CRC stamp cannot collide with the corrupted bytes."""
+        self.pages = jax.tree.map(
+            lambda arr: arr.at[:, pid].set(
+                jnp.where(arr[:, pid] <= 0, 1 - arr[:, pid],
+                          -arr[:, pid])),
+            self.pages)
+
+    def verify_integrity(self) -> List[Tuple[int, int]]:
+        """Re-hash every stamped page and quarantine mismatches: the
+        chain hash is barred from the index permanently, the page is
+        unpublished (free-listed immediately when nobody references it),
+        and callers fail/replay any slot still referencing it. Returns
+        the detected (page id, chain hash) pairs."""
+        bad: List[Tuple[int, int]] = []
+        for pid, crc in list(self._page_crc.items()):
+            if self._page_bytes_crc(pid) == crc:
+                continue
+            h = self._published[pid]
+            self._quarantined.add(h)
+            self._unpublish(pid)
+            if self._ref[pid] == 0:
+                self._free.append(pid)
+            self.counters["pages_quarantined"] += 1
+            bad.append((pid, h))
+        return bad
+
+    def slots_referencing(self, pid: int) -> List[int]:
+        """Slots whose table row still maps the page (the blast radius
+        of a quarantined page: each must be failed and replayed)."""
+        return [s for s in range(self.max_batch)
+                if pid in self._table[s]]
 
     # ------------------------------------------------------------- device
 

@@ -43,9 +43,16 @@ class Request:
         if self.max_new < 1:
             raise ValueError("max_new must be >= 1")
         self.generated: List[int] = []
-        self.state = "waiting"  # waiting | prefilling | running | finished
+        # waiting | prefilling | running | finished | failed | shed
+        self.state = "waiting"
         self.slot: int = -1
         self.preemptions = 0
+        # fault-replay bookkeeping: ``retries`` counts re-admissions
+        # after an injected/detected fault; ``not_before`` is the
+        # exponential-backoff floor (engine-step clock) before the next
+        # admission attempt.
+        self.retries = 0
+        self.not_before = 0
         # disaggregated mode: True once a prefill worker finished this
         # request's prompt (it may enter decode admission); reset on
         # preemption — the released pages must be re-prefilled.
@@ -66,12 +73,20 @@ class Request:
 
 
 class ContinuousBatchingScheduler:
-    def __init__(self, max_slots: int):
+    def __init__(self, max_slots: int, aged_priority_after: int = 2):
         self.max_slots = max_slots
+        # a request preempted/replayed this many times jumps ahead of
+        # fresh arrivals at admission (starvation guard: under sustained
+        # pressure the youngest-first eviction policy would otherwise
+        # keep evicting the same re-queued request forever)
+        self.aged_priority_after = aged_priority_after
         self.waiting: List[Request] = []
         self.running: Dict[int, Request] = {}  # slot -> request
         self.finished: List[Request] = []
-        self.stats = {"admissions": 0, "preemptions": 0, "completions": 0}
+        self.failed: List[Request] = []
+        self.shed: List[Request] = []
+        self.stats = {"admissions": 0, "preemptions": 0, "completions": 0,
+                      "replays": 0, "failures": 0, "shed": 0}
         self._occupancy: List[float] = []
 
     # ------------------------------------------------------------- queues
@@ -86,11 +101,24 @@ class ContinuousBatchingScheduler:
     def free_slots(self) -> List[int]:
         return [s for s in range(self.max_slots) if s not in self.running]
 
+    def _aged(self, req: Request) -> bool:
+        return (req.preemptions + req.retries) >= self.aged_priority_after
+
     def next_admittable(self, clock: int) -> Optional[Request]:
+        """Oldest eligible request, except that *aged* requests (over
+        the preemption/retry threshold) outrank fresh arrivals — the
+        deterministic anti-starvation rule. ``not_before`` (fault-replay
+        backoff) gates eligibility exactly like ``arrival``."""
+        best: Optional[Request] = None
         for req in self.waiting:
-            if req.arrival <= clock:
-                return req
-        return None
+            if req.arrival > clock or req.not_before > clock:
+                continue
+            if best is None or ((not self._aged(best), best.arrival,
+                                 best.rid) >
+                                (not self._aged(req), req.arrival,
+                                 req.rid)):
+                best = req
+        return best
 
     def admit(self, req: Request, slot: int) -> None:
         self.waiting.remove(req)
@@ -121,6 +149,40 @@ class ContinuousBatchingScheduler:
         req.prefill_done = False  # pages dropped: must re-prefill
         self.stats["preemptions"] += 1
         self.add(req)
+
+    def requeue(self, req: Request, *, not_before: int = 0) -> None:
+        """Fault replay: like ``preempt`` but accounted separately and
+        gated by an exponential-backoff floor. The generated prefix is
+        kept — re-admission re-prefills ``resume_prompt()`` (adopting
+        any surviving cached pages) and continues token-identically."""
+        assert req.state == "running"
+        del self.running[req.slot]
+        req.state, req.slot = "waiting", -1
+        req.retries += 1
+        req.prefill_done = False
+        req.not_before = not_before
+        self.stats["replays"] += 1
+        self.add(req)
+
+    def fail(self, req: Request) -> None:
+        """Deterministic terminal failure (retry budget exhausted): the
+        request leaves the system with ``state="failed"`` instead of
+        looping through replay forever."""
+        if req.state == "running":
+            del self.running[req.slot]
+        elif req in self.waiting:
+            self.waiting.remove(req)
+        req.state, req.slot = "failed", -1
+        self.failed.append(req)
+        self.stats["failures"] += 1
+
+    def shed_request(self, req: Request) -> None:
+        """Admission-control shed: dropped from the waiting queue before
+        consuming any decode resources (state="shed")."""
+        self.waiting.remove(req)
+        req.state, req.slot = "shed", -1
+        self.shed.append(req)
+        self.stats["shed"] += 1
 
     # -------------------------------------------------------------- stats
 
@@ -158,12 +220,10 @@ class PrefillWorkerPool:
         # per-worker FIFO of (ready_at_clock, request)
         self.queues: List[List[tuple]] = [[] for _ in range(n_workers)]
         self.free_at = [0] * n_workers
-        self.stats = {"placed": 0, "prefilled_tokens": 0}
+        self.stats = {"placed": 0, "prefilled_tokens": 0,
+                      "worker_failures": 0, "failover_replacements": 0}
 
-    def place(self, req: Request, clock: int) -> int:
-        """Queue ``req`` on the least-loaded worker; returns ready time."""
-        w = min(range(self.n_workers),
-                key=lambda i: (len(self.queues[i]), self.free_at[i], i))
+    def _place_on(self, w: int, req: Request, clock: int) -> int:
         n_tok = len(req.resume_prompt())
         dur = -(-n_tok // self.span_len) * self.chunk  # ceil spans * chunk
         start = max(clock, self.free_at[w])
@@ -174,6 +234,37 @@ class PrefillWorkerPool:
         self.stats["placed"] += 1
         self.stats["prefilled_tokens"] += n_tok
         return ready
+
+    def place(self, req: Request, clock: int) -> int:
+        """Queue ``req`` on the least-loaded worker; returns ready time."""
+        w = min(range(self.n_workers),
+                key=lambda i: (len(self.queues[i]), self.free_at[i], i))
+        return self._place_on(w, req, clock)
+
+    def fail_worker(self, w: int, clock: int, *,
+                    respawn_boundaries: int = 4) -> List[Request]:
+        """Kill worker ``w`` mid-flight: its queued prompts (including
+        the one being prefilled) are re-placed on the least-loaded
+        *survivor* — the OCS spare-substitution analogue: route around
+        the failed component and replay the lost work. The dead worker
+        respawns (becomes placeable again) after ``respawn_boundaries``
+        chunks; with one worker total, the replays simply wait for the
+        respawn. Returns the re-placed requests."""
+        lost = [req for _, req in self.queues[w]]
+        self.queues[w] = []
+        self.free_at[w] = clock + respawn_boundaries * self.chunk
+        self.stats["worker_failures"] += 1
+        survivors = [i for i in range(self.n_workers) if i != w]
+        for req in lost:
+            if survivors:
+                tgt = min(survivors,
+                          key=lambda i: (len(self.queues[i]),
+                                         self.free_at[i], i))
+            else:
+                tgt = w  # sole worker: replay lands after the respawn
+            self._place_on(tgt, req, clock)
+            self.stats["failover_replacements"] += 1
+        return lost
 
     def pop_ready(self, clock: int) -> List[Request]:
         """Prompts whose prefill completed by ``clock`` (FIFO per worker)."""

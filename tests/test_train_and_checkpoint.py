@@ -139,6 +139,31 @@ def test_checkpoint_detects_corruption():
         shutil.rmtree(tmp)
 
 
+def test_checkpoint_corruption_falls_back_to_previous_step():
+    """A corrupt latest checkpoint (truncated leaf file) must not kill
+    the restore when an older complete checkpoint exists: the corrupt
+    step is quarantined (renamed ``.corrupt``, invisible to all_steps)
+    and the previous manifest restored, with ``last_restored_step``
+    re-anchoring the caller's replay range."""
+    tmp = tempfile.mkdtemp()
+    try:
+        mgr = CheckpointManager(tmp, keep=3)
+        for s in (1, 2):
+            mgr.save(s, {"w": jnp.full((4, 4), float(s))}, blocking=True)
+        leaf = os.path.join(tmp, "step_00000002", "w.npy")
+        with open(leaf, "r+b") as fh:  # truncate mid-payload
+            fh.truncate(os.path.getsize(leaf) // 2)
+        out = mgr.restore(2, {"w": jnp.zeros((4, 4))})
+        np.testing.assert_array_equal(np.asarray(out["w"]),
+                                      np.full((4, 4), 1.0))
+        assert mgr.last_restored_step == 1
+        assert mgr.all_steps() == [1]
+        assert os.path.isdir(os.path.join(tmp, "step_00000002.corrupt"))
+        assert not os.path.isdir(os.path.join(tmp, "step_00000002"))
+    finally:
+        shutil.rmtree(tmp)
+
+
 def test_checkpoint_async_and_shape_mismatch():
     tmp = tempfile.mkdtemp()
     try:

@@ -62,3 +62,17 @@ def run(emit) -> None:
     gathered = 1024 * 8 * 128 * 4
     emit("kernels/sparse_gather_1kx8_ref_us", us,
          f"v5e HBM-bound={gathered / ROOFLINE_TARGET.hbm_bw * 1e6:.2f}us")
+
+    # m-grouped MoE GEMM: 2048 sorted rows over 16 experts, block_m=128.
+    # Weight traffic = one (D, F) tile per m-tile (vs all-E for a dense
+    # capacity buffer); the v5e bound is that stream at HBM rate.
+    mg, dg, fg, eg = 2048, 512, 1024, 16
+    xg = jax.random.normal(key, (mg, dg), jnp.float32)
+    wg = jax.random.normal(key, (eg, dg, fg), jnp.float32)
+    gids = jnp.repeat(jnp.arange(16, dtype=jnp.int32), 1)
+    us = _time(lambda *xs: ops.grouped_matmul(*xs, impl="ref"),
+               xg, wg, gids)
+    wbytes = gids.shape[0] * dg * fg * 2  # one bf16 tile per m-tile
+    emit("kernels/moe_grouped_2048x512x1024_ref_us", us,
+         f"v5e weight-stream bound="
+         f"{wbytes / ROOFLINE_TARGET.hbm_bw * 1e6:.1f}us")

@@ -21,7 +21,11 @@ Five sections:
      fake host devices in a subprocess): tok/s vs single-host, plus
      disaggregated prefill/decode page-transfer traffic. On CPU the
      fake-device mesh pays real overhead, so tok/s is a wiring check,
-     not a speedup claim (see docs/serving.md).
+     not a speedup claim (see docs/serving.md);
+  6. MoE dispatch — sort-based grouped (dropless) vs the dense capacity
+     buffer on the mixtral/kimi smoke MoE layers at a decode-shaped
+     batch: tok/s plus the estimated HBM bytes/token each dispatch
+     streams (gate: grouped beats capacity on mixtral).
 
   PYTHONPATH=src python benchmarks/bench_serve.py [--arch qwen2_0_5b]
       [--json]        # also write BENCH_serve.json
@@ -154,6 +158,132 @@ def bench_int8_vs_bf16(cfg, params, *, batch, prompt_len, max_new, chunk,
     out["capacity_ratio"] = (out["bf16"]["per_token_bytes"]
                              / out["int8"]["per_token_bytes"])
     return out
+
+
+# -- MoE dispatch (section 6 + the tier-1 grouped-kernel gate) --------------
+
+
+def _moe_hbm_bytes_per_token(cfg, t, mode, plan=None):
+    """Estimated HBM bytes streamed per token by one MoE layer's
+    dispatch at fp32. Capacity reads every expert's weights and writes/
+    reads the dense (E, C, D) buffer; grouped reads one (D, F) weight
+    tile per *used* m-tile plus the sorted M_pad row buffer."""
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    nw = 3 if cfg.mlp_act == "swiglu" else 2
+    itemsize = 4
+    if mode == "capacity":
+        cap = t  # dropless: capacity == chunk token count
+        weights = e * nw * d * f
+        buffers = e * cap * (2 * d + f)  # scatter in, h, gather out
+    else:
+        used = int(np.sum(np.asarray(plan.block_experts) >= 0))
+        weights = used * nw * d * f  # one weight tile DMA per used tile
+        buffers = plan.padded_rows * (2 * d + f)
+    return (weights + buffers) * itemsize / t
+
+
+def bench_moe(emit, log, *, t=256, block_m=64, reps=20, seed=0):
+    """Section 6: grouped vs capacity dispatch on the MoE smoke layers,
+    decode-shaped (t single-token rows through one expert layer).
+    ``block_m=64`` is the serving-scale m-tile: the dropless buffer is
+    round_up(t*k + E*(block_m-1), block_m) rows vs capacity's E*t."""
+    from repro.models.moe import (grouped_dispatch_plan, moe_ffn,
+                                  moe_param_specs, _route)
+
+    log(f"== [moe] grouped vs capacity dropless dispatch "
+        f"(t={t} decode rows, block_m={block_m})")
+    for arch in ("mixtral_8x22b", "kimi_k2_1t_a32b"):
+        cfg = get_smoke(arch)
+        p = init_params(jax.random.fold_in(jax.random.key(1), seed),
+                        moe_param_specs(cfg))
+        x = jax.random.normal(jax.random.key(2), (t, 1, cfg.d_model),
+                              jnp.float32)
+        tok_s = {}
+        for tag, kw in (("grouped", {"dispatch": "grouped", "impl": "ref",
+                                     "block_m": block_m}),
+                        ("capacity", {"dropless": True})):
+            fn = jax.jit(lambda pp, xx, kw=kw: moe_ffn(
+                pp, xx, cfg, jnp.float32, **kw)[0])
+            fn(p, x).block_until_ready()  # warm
+            best = 0.0
+            for _ in range(3):  # best-of-3: shared-CPU stall robustness
+                t0 = time.time()
+                for _ in range(reps):
+                    out = fn(p, x)
+                out.block_until_ready()
+                best = max(best, reps * t / (time.time() - t0))
+            tok_s[tag] = best
+        _, _, _, gate_idx = _route(p, x.reshape(t, cfg.d_model),
+                                   jnp.float32, cfg.experts_per_token)
+        plan = grouped_dispatch_plan(gate_idx, n_experts=cfg.n_experts,
+                                     block_m=block_m)
+        hbm = {tag: _moe_hbm_bytes_per_token(cfg, t, tag, plan)
+               for tag in ("grouped", "capacity")}
+        speedup = tok_s["grouped"] / tok_s["capacity"]
+        gated = arch == "mixtral_8x22b" and speedup <= 1.0
+        for tag in ("grouped", "capacity"):
+            emit(f"serve/moe_{arch}_{tag}_tok_s", tok_s[tag], "")
+            emit(f"serve/moe_{arch}_{tag}_hbm_bytes_per_token", hbm[tag],
+                 "")
+        emit(f"serve/moe_{arch}_grouped_speedup", speedup,
+             "FAILED: grouped <= capacity on mixtral" if gated
+             else ("gate > 1.0x" if arch == "mixtral_8x22b" else ""))
+        log(f"{arch}: grouped {tok_s['grouped']:8.1f} tok/s "
+            f"({hbm['grouped']:.0f} B/token) | capacity "
+            f"{tok_s['capacity']:8.1f} tok/s ({hbm['capacity']:.0f} "
+            f"B/token) | {speedup:.2f}x")
+
+
+def _moe_smoke() -> int:
+    """Grouped-kernel==oracle gate (fatal, tier-1): the m-grouped GEMM
+    kernel in interpret mode must match kernels/ref.grouped_matmul_ref
+    for bf16 and int8(+scale) weights, and the grouped serving dispatch
+    end-to-end (interpret kernel) must match capacity-dropless on the
+    mixtral smoke MoE layer."""
+    from repro.kernels import moe_gemm, ref as kref
+    from repro.models.moe import (moe_ffn, moe_param_specs,
+                                  quantize_moe_params)
+
+    failures = 0
+    key = jax.random.key(3)
+    m, d, f, e = 64, 32, 48, 4
+    gids = jnp.array([0, 0, 1, -1, 2, 3, 3, -1], jnp.int32)
+    x32 = jax.random.normal(jax.random.fold_in(key, 0), (m, d))
+    wf = jax.random.normal(jax.random.fold_in(key, 1), (e, d, f))
+    cases = {
+        "bf16": (x32.astype(jnp.bfloat16), wf.astype(jnp.bfloat16), None,
+                 2e-2),
+        "int8": (x32, jnp.clip(jnp.round(wf * 40), -127,
+                               127).astype(jnp.int8),
+                 jnp.abs(jax.random.normal(jax.random.fold_in(key, 2),
+                                           (e,))) + 0.1, 1e-5),
+    }
+    for tag, (x, w, scale, tol) in cases.items():
+        got = moe_gemm.grouped_matmul(x, w, gids, w_scale=scale,
+                                      interpret=True, block_f=16)
+        want = kref.grouped_matmul_ref(x, w, gids, w_scale=scale)
+        err = float(jnp.max(jnp.abs(got.astype(jnp.float32)
+                                    - want.astype(jnp.float32))))
+        if err > tol:
+            print(f"FAILED [moe {tag}]: grouped kernel != oracle "
+                  f"(max|diff|={err:.2e} > {tol})")
+            failures += 1
+    cfg = get_smoke("mixtral_8x22b")
+    p = quantize_moe_params(init_params(jax.random.fold_in(key, 4),
+                                        moe_param_specs(cfg)))
+    xm = jax.random.normal(jax.random.fold_in(key, 5),
+                           (2, 5, cfg.d_model))
+    got, _ = moe_ffn(p, xm, cfg, jnp.float32, dispatch="grouped",
+                     impl="interpret")
+    want, _ = moe_ffn(p, xm, cfg, jnp.float32, dropless=True)
+    err = float(jnp.max(jnp.abs(got - want)))
+    if err > 1e-4:
+        print(f"FAILED [moe]: grouped dispatch != capacity dropless "
+              f"(max|diff|={err:.2e})")
+        failures += 1
+    print(f"smoke [moe]: grouped kernel==oracle (bf16, int8) and "
+          f"grouped==capacity-dropless on mixtral (max|diff|={err:.1e})")
+    return failures
 
 
 # -- sharded serving (section 5 + the tier-1 parity gate) -------------------
@@ -432,6 +562,9 @@ def run_sections(emit, *, arch="qwen2_0_5b", batch=4, prompt_len=16,
     # 5. sharded serving (subprocess: needs a multi-device mesh) ----------
     bench_sharded(emit, log)
 
+    # 6. MoE dispatch: grouped (dropless sort) vs capacity buffer ---------
+    bench_moe(emit, log, seed=seed)
+
 
 # last arrivals-workload registry snapshot, exported to run.py --json
 # under the BENCH_serve.json "metrics" key (see metrics_snapshot())
@@ -555,6 +688,9 @@ def run_smoke() -> int:
         print(f"smoke [{tag}]: kernel==oracle over "
               f"{sum(len(p) for p in prompts)} prompt + 8 decode tokens, "
               f"{compiles} span-prefill programs (stable)")
+    # grouped-MoE gate (fatal): m-grouped GEMM kernel == jnp oracle
+    # (bf16 + int8) and grouped dispatch == capacity-dropless
+    failures += _moe_smoke()
     # fault-injection parity gate (fatal): survivors of an injected
     # fault schedule must match the fault-free run byte for byte
     failures += _fault_smoke()

@@ -23,6 +23,7 @@ from repro.kernels.decode_attention import \
     paged_decode_span_attention as _paged_span_pl
 from repro.kernels.flash_attention import flash_attention as _flash_pl
 from repro.kernels.matmul import matmul as _matmul_pl
+from repro.kernels.moe_gemm import grouped_matmul as _grouped_pl
 from repro.kernels.rwkv_scan import rwkv_wkv as _wkv_pl
 from repro.kernels.sparse_gather import sparse_gather_sum as _gather_pl
 
@@ -231,6 +232,61 @@ def paged_decode_span_attention(q: Array, k_pages: Array, v_pages: Array,
                               k_pages, v_pages, page_table, pos, k_scale,
                               v_scale)
     return local(q, k_pages, v_pages, page_table, pos, k_scale, v_scale)
+
+
+# -- grouped MoE GEMM: single-host impl + shard_map expert parallelism -----
+
+
+def _grouped_local(x, w, group_ids, w_scale, impl, block_f):
+    if impl == "ref":
+        return ref.grouped_matmul_ref(x, w, group_ids, w_scale=w_scale)
+    return _grouped_pl(x, w, group_ids, w_scale=w_scale, block_f=block_f,
+                       interpret=impl == "interpret")
+
+
+@partial(jax.jit, static_argnames=("impl", "block_f", "mesh",
+                                   "expert_axis"))
+def grouped_matmul(x: Array, w: Array, group_ids: Array, *,
+                   w_scale: Optional[Array] = None,
+                   impl: str = "pallas", block_f: int = 512,
+                   mesh=None, expert_axis: str = "data") -> Array:
+    """m-grouped contiguous GEMM over expert-sorted token rows.
+
+    x: (M, D) sorted+padded rows; w: (E, D, F); group_ids (M // block_m,)
+    expert id per m-tile (-1 = pad tile -> zero rows). ``w_scale`` (E,)
+    dequantizes int8 expert weights inside the kernel.
+
+    ``mesh``: when set, shard_map the call with experts sharded over
+    ``expert_axis`` (the "data" mesh axis, matching AxisRules' "expert"
+    placement): each shard keeps its contiguous E/ep slice of ``w``,
+    rewrites global tile ids into its local range (-1 elsewhere, so
+    non-local tiles produce zeros), and a psum restores the full (M, F)
+    output — every tile is owned by exactly one shard. Experts that
+    don't divide the axis fall back to replicated weights (the same
+    divisibility story as the paged-attention GQA fallback)."""
+    e = w.shape[0]
+    local = partial(_grouped_local, impl=impl, block_f=block_f)
+    ep = _mesh_axis_size(mesh, expert_axis) if mesh is not None else 1
+    if ep <= 1 or e % ep:
+        return local(x, w, group_ids, w_scale)
+    e_local = e // ep
+    has_scale = w_scale is not None
+
+    def body(xl, wl, gids, *rest):
+        sl = rest[0] if has_scale else None
+        lo = jax.lax.axis_index(expert_axis) * e_local
+        g = gids - lo
+        g = jnp.where((g >= 0) & (g < e_local), g, -1)
+        out = local(xl, wl, g, sl)
+        return jax.lax.psum(out, expert_axis)
+
+    operands = [x, w, group_ids]
+    specs = [P(None, None), P(expert_axis, None, None), P(None)]
+    if has_scale:
+        operands.append(w_scale)
+        specs.append(P(expert_axis))
+    return shard_map(body, mesh=mesh, in_specs=tuple(specs),
+                     out_specs=P(None, None), check_rep=False)(*operands)
 
 
 @partial(jax.jit, static_argnames=("impl", "chunk"))

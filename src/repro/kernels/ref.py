@@ -100,6 +100,28 @@ def paged_gather_dequant_ref(pages: Array, page_table: Array,
     return g.astype(dtype).reshape(b, m * p, kv, d)
 
 
+def grouped_matmul_ref(x: Array, w: Array, group_ids: Array, *,
+                       w_scale: Optional[Array] = None,
+                       out_dtype=None) -> Array:
+    """Segment-matmul oracle for the m-grouped contiguous MoE GEMM.
+
+    x: (M, D) sorted+padded token rows; w: (E, D, F); group_ids:
+    (M // block_m,) expert id per m-tile (-1 = pad-only tile -> zeros).
+    ``w_scale`` (E,) fp32 is applied to the fp32 product after the dot,
+    matching the kernel's post-accumulation dequant exactly."""
+    m, d = x.shape
+    nb = group_ids.shape[0]
+    bm = m // nb
+    xb = x.reshape(nb, bm, d).astype(jnp.float32)
+    gmax = jnp.maximum(group_ids, 0)
+    wb = w[gmax].astype(jnp.float32)  # (nb, D, F)
+    out = jnp.einsum("bmd,bdf->bmf", xb, wb)
+    if w_scale is not None:
+        out = out * w_scale.astype(jnp.float32)[gmax][:, None, None]
+    out = jnp.where(group_ids[:, None, None] >= 0, out, 0.0)
+    return out.reshape(m, -1).astype(out_dtype or x.dtype)
+
+
 def rwkv_wkv_ref(r: Array, k: Array, v: Array, logw: Array,
                  u: Array) -> Array:
     """Token-serial recurrence (the definitional oracle).

@@ -134,6 +134,11 @@ def main() -> None:
                          "window; final partial chunk buckets to pow2)")
     ap.add_argument("--quantize", choices=["none", "int8", "fp8"],
                     default="none")
+    ap.add_argument("--moe-dispatch", choices=["grouped", "capacity"],
+                    default="grouped",
+                    help="MoE serving dispatch: sort-based dropless "
+                         "grouped GEMM (default) or the dense capacity "
+                         "buffer (legacy)")
     ap.add_argument("--kv-int8", action="store_true",
                     help="int8 paged KV pages (attention archs)")
     ap.add_argument("--temperature", type=float, default=0.0)
@@ -195,7 +200,8 @@ def main() -> None:
     ctx = ModelContext(
         compute_dtype=jnp.float32, q_chunk=1024, mamba_chunk=16,
         rwkv_chunk=8,
-        decode_cache_dtype=jnp.int8 if args.kv_int8 else None)
+        decode_cache_dtype=jnp.int8 if args.kv_int8 else None,
+        moe_dispatch=args.moe_dispatch)
     params = init_params(jax.random.key(args.seed), api.model_specs(cfg))
     if args.quantize == "fp8":
         params = quantize_weights(params, jnp.float8_e4m3fn)

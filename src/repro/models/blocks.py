@@ -49,7 +49,9 @@ class ModelContext:
                  rwkv_chunk: int = 16, attn_impl: str = "xla",
                  decode_cache_dtype=None, full_cache_window: bool = False,
                  mesh=None, data_axis: str = "data",
-                 model_axis: str = "model"):
+                 model_axis: str = "model",
+                 moe_dispatch: str = "grouped",
+                 moe_impl: Optional[str] = None):
         self.compute_dtype = compute_dtype
         self.q_chunk = q_chunk
         self.shard = shard
@@ -67,10 +69,26 @@ class ModelContext:
         self.mesh = mesh
         self.data_axis = data_axis
         self.model_axis = model_axis
+        # serving MoE dispatch: "grouped" (sort-based dropless through the
+        # m-grouped GEMM kernel; the default) or "capacity" (the legacy
+        # dense dropless buffer). Training forwards always use capacity
+        # dispatch. moe_impl=None derives the kernel impl from attn_impl.
+        self.moe_dispatch = moe_dispatch
+        self.moe_impl = moe_impl
 
     @property
     def cache_dtype(self):
         return self.decode_cache_dtype or self.compute_dtype
+
+    def moe_kwargs(self) -> Dict[str, Any]:
+        """Serving-path moe_ffn kwargs for this context (dropless)."""
+        if self.moe_dispatch != "grouped":
+            return {"dropless": True}
+        impl = self.moe_impl or {"pallas": "pallas",
+                                 "pallas_interpret": "interpret"}.get(
+                                     self.attn_impl, "ref")
+        return {"dispatch": "grouped", "impl": impl, "mesh": self.mesh,
+                "expert_axis": self.data_axis}
 
 
 # ---------------------------------------------------------------------------
@@ -334,7 +352,7 @@ def sublayer_prefill(p, x, cache, cfg: ModelConfig, ctx: ModelContext, idx,
         new_cache["cm_tok"] = cm_tok
     elif cfg.sublayer_has_moe(idx):
         mlp, _ = moe_ffn(p["mlp"], h, cfg, dtype, shard=ctx.shard,
-                         dropless=True)
+                         **ctx.moe_kwargs())
     else:
         mlp = dense_ffn(p["mlp"], h, cfg, dtype)
     x = x + mlp
@@ -389,7 +407,7 @@ def sublayer_decode(p, x, cache, pos, cfg: ModelConfig, ctx: ModelContext,
         new_cache["cm_tok"] = cm_tok
     elif cfg.sublayer_has_moe(idx):
         mlp, _ = moe_ffn(p["mlp"], h, cfg, dtype, shard=ctx.shard,
-                         dropless=True)
+                         **ctx.moe_kwargs())
     else:
         mlp = dense_ffn(p["mlp"], h, cfg, dtype)
     x = x + mlp
@@ -486,7 +504,7 @@ def sublayer_decode_span(p, x, cache, pos, live, cfg: ModelConfig,
         new_cache["cm_tok"] = cm_tok
     elif cfg.sublayer_has_moe(idx):
         mlp, _ = moe_ffn(p["mlp"], h, cfg, dtype, shard=ctx.shard,
-                         dropless=True)
+                         **ctx.moe_kwargs())
     else:
         mlp = dense_ffn(p["mlp"], h, cfg, dtype)
     x = x + jnp.where(live[..., None], mlp, 0.0).astype(dtype)
@@ -648,7 +666,7 @@ def sublayer_decode_paged(p, x, pages, page_table, pos, cfg: ModelConfig,
     h = rms_norm(x, p["ln2"], cfg.norm_eps)
     if cfg.sublayer_has_moe(idx):
         mlp, _ = moe_ffn(p["mlp"], h, cfg, dtype, shard=ctx.shard,
-                         dropless=True)
+                         **ctx.moe_kwargs())
     else:
         mlp = dense_ffn(p["mlp"], h, cfg, dtype)
     x = x + mlp
@@ -727,7 +745,7 @@ def sublayer_decode_span_paged(p, x, pages, page_table, pos, live,
     h = rms_norm(x, p["ln2"], cfg.norm_eps)
     if cfg.sublayer_has_moe(idx):
         mlp, _ = moe_ffn(p["mlp"], h, cfg, dtype, shard=ctx.shard,
-                         dropless=True)
+                         **ctx.moe_kwargs())
     else:
         mlp = dense_ffn(p["mlp"], h, cfg, dtype)
     x = x + mlp

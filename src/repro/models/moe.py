@@ -1,29 +1,43 @@
-"""Mixture-of-Experts FFN: GShard-style capacity dispatch, expert-parallel.
+"""Mixture-of-Experts FFN: capacity dispatch (training) + sort-based
+dropless dispatch (serving).
 
 The dispatch pattern is the paper's SparseCore story at the framework level:
-fine-grained scatter/gather of per-token vectors across the pod (vs the
-dense AllReduce of parameter tensors). Experts are sharded over the "data"
-mesh axis (expert parallelism); expert hidden dims over "model" (tensor
-parallelism). GSPMD materializes the token movement as all-to-all-like
-collectives — visible in the dry-run HLO and costed by the roofline.
+fine-grained sort/scatter of per-token vectors (vs the dense AllReduce of
+parameter tensors). Two dispatch modes share one router:
 
-Dispatch: top-k routing -> position-in-expert via one-hot cumsum (top-1
-assignments take priority over top-2, etc.) -> scatter into an
-(E, capacity, D) buffer (overflow tokens drop, mode="drop") -> batched
-expert matmuls -> gather back and combine with renormalized gate weights.
+* ``dispatch="capacity"`` — GShard-style training dispatch: top-k routing
+  -> position-in-expert via one-hot cumsum (top-1 assignments take priority
+  over top-2, etc.) -> scatter into an (E, capacity, D) buffer (overflow
+  tokens drop, ``mode="drop"``) -> batched expert matmuls -> gather back
+  and combine with renormalized gate weights. ``dropless=True`` sizes the
+  buffer so nothing can drop — correct, but it burns an (E, T, D) buffer.
+
+* ``dispatch="grouped"`` — sort-based dropless serving dispatch: stable-
+  argsort the (T*k) assignments by expert, pad each expert's group to a
+  ``block_m`` boundary, run the m-grouped contiguous GEMM Pallas kernel
+  (kernels/moe_gemm.py) over the sorted rows with a scalar-prefetched
+  tile->expert table, then unpermute and combine with the renormalized
+  gate weights. No capacity buffer, no drops: the working set is
+  M_pad = round_up(T*k + E*(block_m-1), block_m) rows instead of E*T.
+  int8 expert weights (``quantize_moe_params``) dequantize inside the
+  kernel via per-expert scales; experts shard over the "data" mesh axis
+  through the shard_map wrapper in kernels/ops.py (expert parallelism).
 
 Aux losses (returned, weighted by the trainer): Switch-style load-balance
-loss and router z-loss.
+loss and router z-loss — identical across dispatch modes.
 """
 
 from __future__ import annotations
 
 import math
-from typing import Dict, Tuple
+from functools import partial
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
 
+from repro.kernels import ops as kops
 from repro.models.config import ModelConfig
 from repro.models.ops import swiglu, gelu
 from repro.models.params import ParamSpec, normal_init
@@ -50,32 +64,292 @@ def capacity(tokens: int, cfg: ModelConfig) -> int:
     return max(8, -(-c // 8) * 8)  # round up to 8
 
 
-MOE_CHUNK_TOKENS = 65536  # bound the (E, C, D) dispatch buffer
+# Bound the dispatch working set for either mode: capacity dispatch
+# materializes (E, C, D); grouped dispatch materializes the sorted
+# M_pad = round_up(T*k + E*(block_m-1), block_m) row buffer. Chunks above
+# this token count scan in sequence-chunks, so M_pad (like C) is per-chunk
+# and the grouped buffer never exceeds ~chunk_tokens * k rows.
+MOE_CHUNK_TOKENS = 65536
+
+# Default m-tile for the grouped GEMM. CI exercises interpret mode at
+# smoke scale, where a small tile keeps padding (≤ E*(block_m-1) wasted
+# rows) negligible; on TPU hardware raise this to the MXU-aligned 128.
+GROUPED_BLOCK_M = 8
+
+_EXPERT_WEIGHTS = ("w_up", "w_gate", "w_down")
 
 
 def _noshard(x, logical):
     return x
 
 
+def quantize_moe_params(params: Dict[str, Array]) -> Dict[str, Array]:
+    """Symmetric per-expert int8 quantization of the expert weights.
+
+    Each of w_up/w_gate/w_down becomes int8 with a fp32 per-expert scalar
+    scale under ``<name>_scale`` (E,) — extending the serving stack's
+    quantization-native story from KV pages to weights. The router stays
+    full precision (its logits feed top-k; quantization there changes
+    routing, not just values). Both dispatch modes consume the quantized
+    dict: grouped dequantizes inside the kernel, capacity dequantizes
+    eagerly per einsum."""
+    out = dict(params)
+    for name in _EXPERT_WEIGHTS:
+        if name not in params:
+            continue
+        w = params[name].astype(jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(w), axis=(1, 2)) / 127.0,
+                            1e-12)
+        q = jnp.clip(jnp.round(w / scale[:, None, None]), -127, 127)
+        out[name] = q.astype(jnp.int8)
+        out[name + "_scale"] = scale
+    return out
+
+
+def _weight(params: Dict[str, Array], name: str, compute_dtype) -> Array:
+    """Expert weight in compute dtype, dequantizing int8 if scaled."""
+    w = params[name]
+    scale = params.get(name + "_scale")
+    if scale is None:
+        return w.astype(compute_dtype)
+    return (w.astype(jnp.float32)
+            * scale[:, None, None]).astype(compute_dtype)
+
+
+def _route(params: Dict[str, Array], xt: Array, compute_dtype, k: int):
+    """Shared router: fp32 logits/probs, renormalized top-k gates."""
+    logits = (xt @ params["router"].astype(compute_dtype)).astype(
+        jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # (T, E)
+    gate_w, gate_idx = jax.lax.top_k(probs, k)  # (T, k)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+    return logits, probs, gate_w, gate_idx
+
+
+def _aux_losses(logits: Array, probs: Array, gate_idx: Array,
+                t: int, k: int, e: int) -> Dict[str, Array]:
+    me = probs.mean(axis=0)  # mean router prob per expert
+    ce = jnp.zeros((e,), jnp.float32).at[gate_idx.reshape(-1)].add(
+        1.0 / (t * k))  # fraction of assignments per expert
+    load_balance = e * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+    return {"load_balance": load_balance, "router_z": z_loss}
+
+
+# ---------------------------------------------------------------------------
+# Sort-based dropless dispatch (grouped)
+# ---------------------------------------------------------------------------
+
+
+class GroupedDispatch(NamedTuple):
+    """Static-shape plan for the sort-based dropless dispatch.
+
+    ``row_src`` (M_pad,): source token row per sorted slot (-1 = pad row).
+    ``dest`` (T*k,): sorted slot of each token-major assignment, i.e. the
+    inverse permutation the combine gathers through.
+    ``block_experts`` (M_pad // block_m,): expert id per m-tile (-1 =
+    pad-only tile) — the scalar-prefetched kernel metadata.
+    ``counts`` (E,): assignments per expert; ``offsets`` (E+1,): their
+    cumsum (monotone, offsets[-1] == T*k); ``padded_starts`` (E,): each
+    expert's block-aligned group start in the sorted buffer.
+    """
+    row_src: Array
+    dest: Array
+    block_experts: Array
+    counts: Array
+    offsets: Array
+    padded_starts: Array
+
+    @property
+    def padded_rows(self) -> int:
+        return self.row_src.shape[0]
+
+
+def grouped_dispatch_plan(gate_idx: Array, *, n_experts: int,
+                          block_m: int = GROUPED_BLOCK_M
+                          ) -> GroupedDispatch:
+    """Build the sorted, block-aligned dispatch plan from (T, k) routing.
+
+    All shapes are static: the sorted buffer is sized at the worst-case
+    round_up(T*k + E*(block_m-1), block_m) — every expert's group padded
+    to a block_m boundary — so each m-tile maps to exactly one expert."""
+    t, k = gate_idx.shape
+    tk = t * k
+    e, bm = n_experts, block_m
+    m_pad = -(-(tk + e * (bm - 1)) // bm) * bm
+    nb = m_pad // bm
+
+    flat_e = gate_idx.reshape(-1).astype(jnp.int32)  # token-major (T*k,)
+    order = jnp.argsort(flat_e)  # stable: ties keep token order
+    sorted_e = flat_e[order]
+    counts = jnp.zeros((e,), jnp.int32).at[flat_e].add(1)
+    offsets = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)])
+    padded = -(-counts // bm) * bm
+    pad_ends = jnp.cumsum(padded)
+    padded_starts = pad_ends - padded
+
+    # Rank of each sorted assignment within its expert group, then its
+    # destination slot in the block-aligned buffer.
+    rank = jnp.arange(tk, dtype=jnp.int32) - offsets[sorted_e]
+    dest_sorted = padded_starts[sorted_e] + rank
+    dest = jnp.zeros((tk,), jnp.int32).at[order].set(dest_sorted)
+    row_src = jnp.full((m_pad,), -1, jnp.int32).at[dest_sorted].set(
+        order // k)
+
+    tile_starts = jnp.arange(nb, dtype=jnp.int32) * bm
+    block_experts = jnp.searchsorted(pad_ends, tile_starts,
+                                     side="right").astype(jnp.int32)
+    block_experts = jnp.where(tile_starts < pad_ends[-1],
+                              block_experts, -1)
+    return GroupedDispatch(row_src, dest, block_experts, counts, offsets,
+                           padded_starts)
+
+
+def grouped_permute(xt: Array, plan: GroupedDispatch, dtype) -> Array:
+    """Gather token rows (T, D) into sorted order (M_pad, D); pad rows
+    are zero (never read by the combine; psum identity under EP)."""
+    src = jnp.maximum(plan.row_src, 0)
+    xs = xt[src].astype(dtype)
+    return jnp.where(plan.row_src[:, None] >= 0, xs,
+                     jnp.zeros((), dtype))
+
+
+def grouped_combine(y: Array, plan: GroupedDispatch, gate_w: Array,
+                    t: int, k: int) -> Array:
+    """Unpermute (M_pad, D) expert outputs back to token order and
+    combine the k assignments with renormalized gate weights -> (T, D)."""
+    gathered = y[plan.dest]  # (T*k, D) token-major
+    weights = gate_w.reshape(-1).astype(y.dtype)  # (T*k,)
+    d = y.shape[-1]
+    return (gathered * weights[:, None]).reshape(t, k, d).sum(axis=1)
+
+
+def _moe_ffn_grouped(params: Dict[str, Array], x: Array, cfg: ModelConfig,
+                     compute_dtype, shard, impl: str, block_m: int, mesh,
+                     expert_axis: str) -> Tuple[Array, Dict[str, Array]]:
+    b, s, d = x.shape
+    t = b * s
+    k, e = cfg.experts_per_token, cfg.n_experts
+    xt = x.reshape(t, d)
+
+    logits, probs, gate_w, gate_idx = _route(params, xt, compute_dtype, k)
+    aux = _aux_losses(logits, probs, gate_idx, t, k, e)
+
+    names = [n for n in _EXPERT_WEIGHTS if n in params]
+    has_scale = any(n + "_scale" in params for n in names)
+    ws, scales = [], []
+    for n in names:
+        sc = params.get(n + "_scale")
+        ws.append(params[n] if sc is not None
+                  else params[n].astype(compute_dtype))
+        scales.append(sc)
+
+    # Expert parallelism: shard experts over ``expert_axis`` when they
+    # divide it, else fall back to fully-replicated compute on the mesh.
+    ep = 1
+    if mesh is not None:
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        if expert_axis in sizes and e % sizes[expert_axis] == 0:
+            ep = sizes[expert_axis]
+    e_local = e // ep
+
+    # The whole sorted-dispatch pipeline — plan, permute, grouped GEMM,
+    # unpermute/combine — runs inside ONE shard_map on serving meshes.
+    # The plan's integer sort/scatter/searchsorted math must compile
+    # per-device: left to GSPMD, sharding propagation through the decode
+    # scan partitions those scatters and the computed plan (hence the
+    # routed outputs) silently diverges from the single-host program.
+    # shard_map replicates the (small) token activations, shards only the
+    # expert dim of the weights, and psums the expert-partial rows — pad
+    # rows and non-local tiles are zero, the psum identity.
+    def run(xt_, gate_w_, gate_idx_, *wx):
+        ws_ = wx[:len(names)]
+        scs_ = wx[len(names):] if has_scale else (None,) * len(names)
+        plan = grouped_dispatch_plan(gate_idx_, n_experts=e,
+                                     block_m=block_m)
+        xs = grouped_permute(xt_, plan, compute_dtype)
+        gids = plan.block_experts
+        if ep > 1:
+            lo = jax.lax.axis_index(expert_axis) * e_local
+            g = gids - lo
+            gids = jnp.where((g >= 0) & (g < e_local), g, -1)
+        by = dict(zip(names, zip(ws_, scs_)))
+
+        def gm(rows, name):
+            w, sc = by[name]
+            return kops.grouped_matmul(rows, w, gids, w_scale=sc,
+                                       impl=impl)
+
+        up = gm(xs, "w_up")
+        h = swiglu(gm(xs, "w_gate"), up) if cfg.mlp_act == "swiglu" \
+            else gelu(up)
+        down = gm(h.astype(compute_dtype), "w_down")
+        if ep > 1:
+            down = jax.lax.psum(down, expert_axis)
+        return grouped_combine(down, plan, gate_w_, t, k)
+
+    args = [xt, gate_w, gate_idx] + ws + (scales if has_scale else [])
+    if mesh is None:
+        out = run(*args)
+    else:
+        P = jax.sharding.PartitionSpec
+        wspec = P(expert_axis) if ep > 1 else P()
+        in_specs = [P(), P(), P()] + [wspec] * len(names) * (
+            2 if has_scale else 1)
+        out = shard_map(run, mesh=mesh, in_specs=tuple(in_specs),
+                        out_specs=P(), check_rep=False)(*args)
+    return out.reshape(b, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Capacity dispatch (GShard) + the public entry point
+# ---------------------------------------------------------------------------
+
+
 def moe_ffn(params: Dict[str, Array], x: Array, cfg: ModelConfig,
             compute_dtype,
             chunk_tokens: int = MOE_CHUNK_TOKENS,
             shard=_noshard,
-            dropless: bool = False) -> Tuple[Array, Dict[str, Array]]:
+            dropless: bool = False,
+            dispatch: str = "capacity",
+            impl: str = "ref",
+            block_m: int = GROUPED_BLOCK_M,
+            mesh=None,
+            expert_axis: str = "data"
+            ) -> Tuple[Array, Dict[str, Array]]:
     """x: (B, S, D) -> (out, aux_losses).
 
     Token count above ``chunk_tokens`` is processed in sequence-chunks
-    (scan), bounding dispatch-buffer memory; capacity is then per-chunk,
-    which is the standard serving/prefill trade-off.
+    (scan), bounding the dispatch working set — (E, C, D) for capacity,
+    the sorted M_pad row buffer for grouped. Capacity is then per-chunk,
+    which is the standard serving/prefill trade-off; grouped results are
+    chunk-invariant (each row's GEMM is independent of group packing).
 
-    ``dropless=True`` sizes the dispatch buffer so no assignment can
-    overflow (capacity = chunk token count): each token's output becomes
-    independent of the rest of the batch. Serving paths require this —
-    with capacity drops, prefill results depend on how many other tokens
-    share the dispatch, so an incremental decode can never bit-match a
-    longer prefill. Training keeps the capacity-dropping GShard dispatch
-    (the load-balance pressure the aux losses assume)."""
+    ``dispatch="capacity"`` is the GShard training path. ``dropless=True``
+    sizes its buffer so no assignment can overflow (capacity = chunk
+    token count): each token's output becomes independent of the rest of
+    the batch. Serving paths require this — with capacity drops, prefill
+    results depend on how many other tokens share the dispatch, so an
+    incremental decode can never bit-match a longer prefill. Training
+    keeps the capacity-dropping dispatch (the load-balance pressure the
+    aux losses assume).
+
+    ``dispatch="grouped"`` is the sort-based dropless serving path (see
+    module docstring): dropless by construction, routed through the
+    m-grouped GEMM kernel. ``impl`` selects the kernel body ("pallas" /
+    "interpret" / "ref"); ``mesh`` + ``expert_axis`` enable the
+    expert-parallel shard_map wrapper."""
     b, s, d = x.shape
+    if dispatch == "grouped":
+        flat = partial(_moe_ffn_grouped, compute_dtype=compute_dtype,
+                       shard=shard, impl=impl, block_m=block_m, mesh=mesh,
+                       expert_axis=expert_axis)
+    elif dispatch == "capacity":
+        flat = partial(_moe_ffn_flat, compute_dtype=compute_dtype,
+                       shard=shard, dropless=dropless)
+    else:
+        raise ValueError(f"unknown MoE dispatch {dispatch!r}")
     if b * s > chunk_tokens and (b * s) % chunk_tokens == 0 and \
             s % (b * s // chunk_tokens) == 0:
         n_chunks = b * s // chunk_tokens
@@ -83,15 +357,14 @@ def moe_ffn(params: Dict[str, Array], x: Array, cfg: ModelConfig,
         xc = x.reshape(b, n_chunks, sc, d).transpose(1, 0, 2, 3)
 
         def body(_, xi):
-            out, aux = _moe_ffn_flat(params, xi, cfg, compute_dtype, shard,
-                                     dropless)
+            out, aux = flat(params, xi, cfg)
             return None, (out, aux)
 
         _, (outs, auxs) = jax.lax.scan(body, None, xc)
         out = outs.transpose(1, 0, 2, 3).reshape(b, s, d)
         aux = jax.tree.map(lambda a: a.mean(0), auxs)
         return out, aux
-    return _moe_ffn_flat(params, x, cfg, compute_dtype, shard, dropless)
+    return flat(params, x, cfg)
 
 
 def _moe_ffn_flat(params: Dict[str, Array], x: Array, cfg: ModelConfig,
@@ -102,10 +375,7 @@ def _moe_ffn_flat(params: Dict[str, Array], x: Array, cfg: ModelConfig,
     k, e = cfg.experts_per_token, cfg.n_experts
     xt = x.reshape(t, d)
 
-    logits = (xt @ params["router"].astype(compute_dtype)).astype(jnp.float32)
-    probs = jax.nn.softmax(logits, axis=-1)  # (T, E)
-    gate_w, gate_idx = jax.lax.top_k(probs, k)  # (T, k)
-    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+    logits, probs, gate_w, gate_idx = _route(params, xt, compute_dtype, k)
 
     # An expert receives at most one assignment per token (top-k indices are
     # distinct), so capacity = t can never drop.
@@ -126,16 +396,16 @@ def _moe_ffn_flat(params: Dict[str, Array], x: Array, cfg: ModelConfig,
 
     # Expert matmuls: E sharded over data (EP), hidden over model (TP).
     up = jnp.einsum("ecd,edf->ecf", dispatched,
-                    params["w_up"].astype(compute_dtype))
+                    _weight(params, "w_up", compute_dtype))
     if cfg.mlp_act == "swiglu":
         gate = jnp.einsum("ecd,edf->ecf", dispatched,
-                          params["w_gate"].astype(compute_dtype))
+                          _weight(params, "w_gate", compute_dtype))
         h = swiglu(gate, up)
     else:
         h = gelu(up)
     h = shard(h, ("expert", "exp_cap", "expert_mlp"))
     down = jnp.einsum("ecf,efd->ecd", h,
-                      params["w_down"].astype(compute_dtype))
+                      _weight(params, "w_down", compute_dtype))
     down = shard(down, ("expert", "exp_cap", None))
 
     gathered = down.at[flat_idx, pos_in_e].get(
@@ -146,13 +416,7 @@ def _moe_ffn_flat(params: Dict[str, Array], x: Array, cfg: ModelConfig,
     weights = (gate_w.T.reshape(-1) * keep).astype(compute_dtype)  # (kT,)
     out = (gathered * weights[:, None]).reshape(k, t, d).sum(axis=0)
 
-    # Aux losses (fp32).
-    me = probs.mean(axis=0)  # mean router prob per expert
-    ce = jnp.zeros((e,), jnp.float32).at[gate_idx.reshape(-1)].add(
-        1.0 / (t * k))  # fraction of assignments per expert
-    load_balance = e * jnp.sum(me * ce)
-    z_loss = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
-    aux = {"load_balance": load_balance, "router_z": z_loss}
+    aux = _aux_losses(logits, probs, gate_idx, t, k, e)
     return out.reshape(b, s, d), aux
 
 

@@ -165,3 +165,27 @@ def test_sparse_gather_one_hot(i):
     w = jnp.ones((1, 1))
     out = ops.sparse_gather_sum(tbl, idx, w, impl="interpret")
     np.testing.assert_allclose(out[0], tbl[i], rtol=1e-6, atol=1e-6)
+
+
+# --------------------------------------------------------- grouped GEMM
+
+
+@pytest.mark.parametrize("block_m,d,f", [(8, 32, 64), (16, 64, 128)])
+def test_grouped_matmul_matches_ref(block_m, d, f):
+    gids = jnp.array([0, 0, 1, -1, 2, 3, 3, -1], jnp.int32)
+    x = rnd(40, (gids.shape[0] * block_m, d))
+    w = rnd(41, (4, d, f))
+    out = ops.grouped_matmul(x, w, gids, impl="interpret", block_f=f)
+    want = ops.grouped_matmul(x, w, gids, impl="ref")
+    np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-5)
+
+
+@hypothesis.given(st.integers(min_value=0, max_value=3))
+@hypothesis.settings(max_examples=4, deadline=None)
+def test_grouped_matmul_single_tile_is_plain_matmul(e):
+    """one m-tile routed to expert e == x @ w[e]."""
+    x = rnd(42, (16, 32))
+    w = rnd(43, (4, 32, 64))
+    gids = jnp.full((1,), e, jnp.int32)
+    out = ops.grouped_matmul(x, w, gids, impl="interpret", block_f=64)
+    np.testing.assert_allclose(out, x @ w[e], rtol=1e-4, atol=1e-4)
